@@ -1,0 +1,30 @@
+"""Fig. 10 — commit-protocol impact on emulated NVM, hybrid workload.
+
+The scan length controls the read-set size: NVM-D's GSN updates every read
+tuple (WAR tracking) so its cost grows with scan length; Poplar's SSN does
+not touch read-only tuples.  SILO pays the epoch wait in latency."""
+from _util import emit, run_bench, ycsb_hybrid_factory
+
+SCANS = (0, 10, 50, 100)
+
+
+def run(duration=None):
+    rows = []
+    for engine in ("centr", "silo", "nvmd", "poplar"):
+        for scan in SCANS:
+            load, make = ycsb_hybrid_factory(scan_length=scan)
+            r = run_bench(engine, make, load, n_workers=4, n_devices=2,
+                          device_kind="nvm", workload_name=f"hybrid_scan{scan}",
+                          epoch_interval=50e-3,
+                          **({"duration": duration} if duration else {}))
+            rows.append({
+                "bench": "fig10", "engine": engine, "scan_length": scan,
+                "txn_per_s": round(r.txn_per_s, 1),
+                "avg_latency_ms": round(r.avg_latency_ms, 3),
+            })
+    emit(rows, ["bench", "engine", "scan_length", "txn_per_s", "avg_latency_ms"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

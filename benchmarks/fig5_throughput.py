@@ -1,0 +1,32 @@
+"""Fig. 5 — throughput vs worker threads (YCSB write-only + TPC-C, 2 SSDs).
+
+Expectation (paper): POPLAR ≈ SILO > CENTR (IO-bound on one device);
+NVM-D far below on SSDs (synchronous unbatched per-txn writes).
+"""
+from _util import THREADS, emit, run_bench, tpcc_factory, ycsb_write_factory
+
+ENGINES = ("centr", "silo", "nvmd", "poplar")
+
+
+def run(duration=None):
+    rows = []
+    for wl_name, (load, make) in (
+        ("ycsb_write", ycsb_write_factory()),
+        ("tpcc", tpcc_factory()),
+    ):
+        for engine in ENGINES:
+            for n in THREADS:
+                r = run_bench(engine, make, load, n_workers=n, n_devices=2,
+                              workload_name=wl_name,
+                              **({"duration": duration} if duration else {}))
+                rows.append({
+                    "bench": "fig5", "workload": wl_name, "engine": engine,
+                    "threads": n, "txn_per_s": round(r.txn_per_s, 1),
+                    "committed": r.committed, "aborts": r.aborts,
+                })
+    emit(rows, ["bench", "workload", "engine", "threads", "txn_per_s", "committed", "aborts"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Fig. 6 — per-device IO bandwidth at saturation (derived from emulated
+device busy-time accounting)."""
+from _util import THREADS, emit, run_bench, tpcc_factory, ycsb_write_factory
+
+ENGINES = ("centr", "silo", "nvmd", "poplar")
+
+
+def run(duration=None):
+    rows = []
+    for wl_name, (load, make) in (
+        ("ycsb_write", ycsb_write_factory()),
+        ("tpcc", tpcc_factory()),
+    ):
+        for engine in ENGINES:
+            n = max(THREADS)
+            r = run_bench(engine, make, load, n_workers=n, n_devices=2,
+                          workload_name=wl_name,
+                          **({"duration": duration} if duration else {}))
+            for i, d in enumerate(r.device_stats):
+                mbps = d["bytes_written"] / max(r.duration_s, 1e-9) / 1e6
+                util = d["busy_time_s"] / max(r.duration_s, 1e-9)
+                rows.append({
+                    "bench": "fig6", "workload": wl_name, "engine": engine,
+                    "device": i, "MB_per_s": round(mbps, 2),
+                    "utilization": round(util, 3),
+                    "avg_write_KB": round(d["avg_write_bytes"] / 1e3, 2),
+                })
+    emit(rows, ["bench", "workload", "engine", "device", "MB_per_s", "utilization", "avg_write_KB"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

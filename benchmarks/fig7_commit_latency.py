@@ -1,0 +1,32 @@
+"""Fig. 7 — commit latency vs worker threads.
+
+Expectation (paper): SILO worst (~epoch interval, 50 ms); POPLAR/CENTR near
+the 5 ms group-commit interval at low thread counts."""
+from _util import THREADS, emit, run_bench, tpcc_factory, ycsb_write_factory
+
+ENGINES = ("centr", "silo", "nvmd", "poplar")
+
+
+def run(duration=None):
+    rows = []
+    for wl_name, (load, make) in (
+        ("ycsb_write", ycsb_write_factory()),
+        ("tpcc", tpcc_factory()),
+    ):
+        for engine in ENGINES:
+            for n in THREADS:
+                r = run_bench(engine, make, load, n_workers=n, n_devices=2,
+                              workload_name=wl_name,
+                              **({"duration": duration} if duration else {}))
+                rows.append({
+                    "bench": "fig7", "workload": wl_name, "engine": engine,
+                    "threads": n,
+                    "avg_latency_ms": round(r.avg_latency_ms, 3),
+                    "p50_latency_ms": round(r.p50_latency_ms, 3),
+                })
+    emit(rows, ["bench", "workload", "engine", "threads", "avg_latency_ms", "p50_latency_ms"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Fig. 8 — runtime breakdown at max worker threads: Log contention
+(sequence-number allocation) / Log work (insert + buffer waits) / Other."""
+from _util import THREADS, emit, run_bench, tpcc_factory, ycsb_write_factory
+
+ENGINES = ("centr", "silo", "nvmd", "poplar")
+
+
+def run(duration=None):
+    rows = []
+    for wl_name, (load, make) in (
+        ("ycsb_write", ycsb_write_factory()),
+        ("tpcc", tpcc_factory()),
+    ):
+        for engine in ENGINES:
+            n = max(THREADS)
+            r = run_bench(engine, make, load, n_workers=n, n_devices=2,
+                          workload_name=wl_name,
+                          **({"duration": duration} if duration else {}))
+            total = sum(r.breakdown.values()) or 1.0
+            rows.append({
+                "bench": "fig8", "workload": wl_name, "engine": engine,
+                "threads": n,
+                "log_contention_pct": round(100 * r.breakdown["contention"] / total, 2),
+                "log_work_pct": round(100 * r.breakdown["log_work"] / total, 2),
+                "other_pct": round(100 * r.breakdown["other"] / total, 2),
+            })
+    emit(rows, ["bench", "workload", "engine", "threads",
+                "log_contention_pct", "log_work_pct", "other_pct"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Fig. 9 — peak throughput vs number of devices (CENTR pinned to 1)."""
+from _util import FAST, THREADS, emit, run_bench, tpcc_factory, ycsb_write_factory
+
+DEVICES = (1, 2, 4)
+
+
+def run(duration=None):
+    rows = []
+    for wl_name, (load, make) in (
+        ("ycsb_write", ycsb_write_factory()),
+        ("tpcc", tpcc_factory()),
+    ):
+        for engine in ("centr", "silo", "nvmd", "poplar"):
+            for nd in DEVICES:
+                if engine == "centr" and nd > 1:
+                    continue
+                n = max(THREADS)
+                r = run_bench(engine, make, load, n_workers=max(n, nd), n_devices=nd,
+                              workload_name=wl_name,
+                              **({"duration": duration} if duration else {}))
+                rows.append({
+                    "bench": "fig9", "workload": wl_name, "engine": engine,
+                    "devices": nd, "txn_per_s": round(r.txn_per_s, 1),
+                })
+    emit(rows, ["bench", "workload", "engine", "devices", "txn_per_s"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

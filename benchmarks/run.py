@@ -1,0 +1,43 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints CSV blocks per benchmark (name,metrics...) plus the roofline table
+derived from the dry-run artifacts.  BENCH_FAST=1 shrinks durations for CI.
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    import fig5_throughput
+    import fig6_io_bandwidth
+    import fig7_commit_latency
+    import fig8_breakdown
+    import fig9_scalability
+    import fig10_commit_protocol
+    import table23_recovery
+    import roofline
+
+    benches = [
+        ("fig5_throughput", fig5_throughput.run),
+        ("fig6_io_bandwidth", fig6_io_bandwidth.run),
+        ("fig7_commit_latency", fig7_commit_latency.run),
+        ("fig8_breakdown", fig8_breakdown.run),
+        ("fig9_scalability", fig9_scalability.run),
+        ("fig10_commit_protocol", fig10_commit_protocol.run),
+        ("table23_recovery", table23_recovery.run),
+        ("roofline", roofline.run),
+    ]
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        print(f"\n### {name}")
+        fn()
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

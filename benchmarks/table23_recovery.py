@@ -1,0 +1,119 @@
+"""Tables 2–3 — recovery performance (checkpoint + log recovery time).
+
+A scaled workload journals through each variant onto n emulated SSDs with a
+mid-run fuzzy checkpoint; we then crash and recover, reporting
+
+  * checkpoint recovery time = max over devices of (ckpt bytes / read bw)
+    + parallel in-memory replay (CENTR: single device serializes reads);
+  * log recovery time analogously over log bytes;
+  * measured wall replay time (CPU component, parallel threads).
+
+Per the paper, recovery time is proportional to bytes-read / device
+parallelism: POPLAR/SILO with n devices ≈ CENTR / n.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from _util import emit, run_bench, ycsb_write_factory  # noqa: E402
+
+from repro.core import CheckpointDaemon, EngineConfig, PoplarEngine, recover  # noqa: E402
+from repro.core.variants import CentrEngine, SiloEngine  # noqa: E402
+from repro.db import OCCWorker, Table  # noqa: E402
+from repro.db import ycsb  # noqa: E402
+
+SSD_READ_BW = 1.2e9  # symmetric with write (§6.1)
+
+
+def _run_one(engine_name: str, n_devices: int, tmp: str, n_txns: int = 4000):
+    table = Table()
+    ycsb.load(table, 10_000)
+    cfg = EngineConfig(n_buffers=n_devices, device_kind="null", device_dir=tmp)
+    if engine_name == "centr":
+        eng = CentrEngine(cfg)
+        n_devices = 1
+    elif engine_name == "silo":
+        eng = SiloEngine(cfg, epoch_interval=10e-3)
+    else:
+        eng = PoplarEngine(cfg)
+    eng.start()
+    workers = [OCCWorker(table, eng, i) for i in range(4)]
+    wl = [ycsb.YCSBWriteOnly(10_000, seed=i) for i in range(4)]
+
+    # first half of the workload
+    for i in range(n_txns // 2):
+        w = workers[i % 4]
+        wl[i % 4].next_txn(w)
+        w.drain()
+
+    # fuzzy checkpoint (Poplar engines expose a CSN; others use buffer DSN)
+    csn_fn = (lambda: eng.commit.csn) if hasattr(eng, "commit") else (lambda: 10**12)
+    ck = CheckpointDaemon(os.path.join(tmp, "ckpt"), n_threads=2, m_files=2, csn_fn=csn_fn)
+    parts = table.partitions(2)
+    try:
+        ck.run_once([table.snapshot_partition(p) for p in parts], validate_timeout=5.0)
+        ckpt_dir = os.path.join(tmp, "ckpt")
+    except TimeoutError:
+        ckpt_dir = None
+
+    # second half
+    for i in range(n_txns // 2):
+        w = workers[i % 4]
+        wl[i % 4].next_txn(w)
+        w.drain()
+    eng.quiesce(range(4), timeout=30)
+    eng.stop()
+
+    # crash + recover
+    t0 = time.perf_counter()
+    state = recover(eng.devices, checkpoint_dir=ckpt_dir, parallel=True)
+    wall_replay_s = time.perf_counter() - t0
+
+    log_bytes = [d.bytes_written for d in eng.devices]
+    ckpt_bytes = 0
+    if ckpt_dir:
+        ckpt_bytes = sum(
+            os.path.getsize(os.path.join(ckpt_dir, f))
+            for f in os.listdir(ckpt_dir) if f.endswith(".bin")
+        )
+    # emulated IO makespans (devices read in parallel)
+    log_io_s = max(b / SSD_READ_BW for b in log_bytes) if log_bytes else 0.0
+    ckpt_io_s = (ckpt_bytes / n_devices) / SSD_READ_BW
+    return {
+        "engine": engine_name,
+        "devices": n_devices,
+        "log_MB": round(sum(log_bytes) / 1e6, 2),
+        "ckpt_MB": round(ckpt_bytes / 1e6, 2),
+        "ckpt_recovery_s": round(ckpt_io_s, 6),
+        "log_recovery_s": round(log_io_s, 6),
+        "wall_replay_s": round(wall_replay_s, 4),
+        "recovered_keys": len(state.data),
+        "rsne": state.rsne,
+    }
+
+
+def run(duration=None):
+    rows = []
+    for engine_name, nd in (("centr", 1), ("silo", 2), ("poplar", 2), ("poplar", 4)):
+        tmp = tempfile.mkdtemp(prefix=f"rec_{engine_name}_{nd}_")
+        try:
+            r = _run_one(engine_name, nd, tmp)
+            r["bench"] = "table23"
+            rows.append(r)
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+    emit(rows, ["bench", "engine", "devices", "log_MB", "ckpt_MB",
+                "ckpt_recovery_s", "log_recovery_s", "wall_replay_s",
+                "recovered_keys", "rsne"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

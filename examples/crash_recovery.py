@@ -1,0 +1,74 @@
+"""Crash + parallel recovery demo: the Poplar journal guarantees that a
+training run resumes from the newest *committed* step marker — shard
+records from a half-flushed step are provably uncommitted and ignored
+(recoverability, paper §3.1/§5, applied to train state).
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.journal import PoplarCheckpointManager, restore_latest, to_pytree
+from repro.models.api import build_model
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+
+def main() -> None:
+    cfg = reduced(get_config("qwen2-1.5b"), n_layers=2)
+    model = build_model(cfg)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, batch=4, seq_len=64))
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init(params, opt_cfg)
+
+    journal = tempfile.mkdtemp(prefix="crash_demo_")
+    mgr = PoplarCheckpointManager(journal, n_lanes=3, flush_interval=1e-3)
+
+    print("== phase 1: train 12 steps, journaling every step ==")
+    for step in range(12):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        params, opt, m = step_fn(params, opt, batch)
+        h = mgr.save(step, {"params": params, "opt": opt, "data": pipe.state()},
+                     {"loss": float(m["loss"])})
+        h.wait()
+        if step == 9:
+            mgr.wait_for_commit(9, timeout=30)  # make sure step 9 is durable
+    committed_before = mgr.last_committed_step()
+    print(f"   last committed step before crash: {committed_before}")
+    print("== CRASH (loggers killed, volatile buffers lost) ==")
+    mgr.crash()
+
+    print("== phase 2: parallel recovery from journal lanes ==")
+    out = restore_latest(journal)
+    assert out is not None
+    rstep, flat, meta = out
+    print(f"   restored step {rstep} (meta {meta}) — "
+          f"{'all' if rstep == 11 else 'volatile tail dropped;'} consistent by construction")
+    assert rstep >= 9
+    tree = to_pytree(flat, {"params": params, "opt": opt, "data": pipe.state()})
+    pipe2 = TokenPipeline.restore(DataConfig(vocab=cfg.vocab, batch=4, seq_len=64), tree["data"])
+    params2 = jax.tree.map(jnp.asarray, tree["params"])
+    opt2 = jax.tree.map(jnp.asarray, tree["opt"])
+
+    print("== phase 3: resume training ==")
+    for step in range(rstep + 1, rstep + 4):
+        batch = {k: jnp.asarray(v) for k, v in pipe2.next_batch().items()}
+        params2, opt2, m = step_fn(params2, opt2, batch)
+        print(f"   step {step} loss {float(m['loss']):.4f}")
+    print("OK — resumed exactly at the recovered cursor", pipe2.cursor)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: train a small llama-family model with Poplar-journaled
+fault tolerance, then generate from it.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+This drives the same code paths as the production launcher
+(`repro.launch.train`) at CPU-friendly scale; swap ``--reduced`` off and add
+the production mesh for pod-scale runs (see launch/dryrun.py for the
+sharding configs that compile for 256/512 chips).
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import train as train_mod
+
+
+def main() -> None:
+    journal = tempfile.mkdtemp(prefix="quickstart_journal_")
+    train_mod.main([
+        "--arch", "tinyllama-1.1b",
+        "--reduced",
+        "--n-layers", "4",
+        "--d-model", "128",
+        "--steps", "60",
+        "--batch", "8",
+        "--seq", "128",
+        "--journal-dir", journal,
+        "--save-every", "20",
+        "--log-every", "10",
+    ])
+    print(f"\njournal lanes written to {journal}:")
+    for f in sorted(os.listdir(journal)):
+        print("  ", f, os.path.getsize(os.path.join(journal, f)), "bytes")
+
+
+if __name__ == "__main__":
+    main()

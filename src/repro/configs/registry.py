@@ -1,0 +1,103 @@
+"""Architecture registry + per-(arch, shape) input specs.
+
+``input_specs(cfg, shape)`` returns ``jax.ShapeDtypeStruct`` stand-ins for
+every model input of the given phase — weak-type-correct, shardable, no
+device allocation (the dry-run pattern).  ``make_inputs`` materializes real
+arrays from the same specs for smoke tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import SHAPES, ArchConfig, ShapeConfig, reduced
+
+_MODULES = {
+    "hymba-1.5b": "hymba_1_5b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "grok-1-314b": "grok_1_314b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "stablelm-12b": "stablelm_12b",
+    "deepseek-7b": "deepseek_7b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "whisper-medium": "whisper_medium",
+    "rwkv6-7b": "rwkv6_7b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    mod = importlib.import_module(f".{_MODULES[name]}", __package__)
+    return mod.CONFIG
+
+
+def cell_applicable(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Is this (arch x shape) cell runnable? (long_500k needs bounded state)"""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "long_500k requires sub-quadratic attention state; "
+            f"{cfg.name} is pure full-attention (see DESIGN §Arch-applicability)"
+        )
+    return True, ""
+
+
+def _text_seq(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """Token count of the text part (vlm reserves patches out of seq_len)."""
+    if cfg.vlm is not None and shape.phase in ("train", "prefill"):
+        return shape.seq_len - cfg.vlm.n_patches
+    return shape.seq_len
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this phase."""
+    b = shape.global_batch
+    st = _text_seq(cfg, shape)
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    if shape.phase == "train":
+        specs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, st), i32),
+            "labels": jax.ShapeDtypeStruct((b, st), i32),
+        }
+        if cfg.vlm is not None:
+            specs["vision_embeds"] = jax.ShapeDtypeStruct((b, cfg.vlm.n_patches, cfg.d_model), bf16)
+        if cfg.enc_dec is not None:
+            specs["frame_embeds"] = jax.ShapeDtypeStruct((b, cfg.enc_dec.enc_seq, cfg.d_model), bf16)
+        return specs
+    if shape.phase == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, st), i32)}
+        if cfg.vlm is not None:
+            specs["vision_embeds"] = jax.ShapeDtypeStruct((b, cfg.vlm.n_patches, cfg.d_model), bf16)
+        if cfg.enc_dec is not None:
+            specs["frame_embeds"] = jax.ShapeDtypeStruct((b, cfg.enc_dec.enc_seq, cfg.d_model), bf16)
+        return specs
+    # decode: one new token against a cache of shape.seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def make_inputs(cfg: ArchConfig, shape: ShapeConfig, seed: int = 0) -> Dict[str, Any]:
+    """Real (host) arrays matching input_specs — smoke tests only."""
+    rng = np.random.default_rng(seed)
+    out: Dict[str, Any] = {}
+    for k, s in input_specs(cfg, shape).items():
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab if k in ("tokens", "labels") else max(1, shape.seq_len)
+            if k == "pos":
+                out[k] = jnp.asarray(shape.seq_len - 1, jnp.int32)
+            else:
+                out[k] = jnp.asarray(rng.integers(0, hi, s.shape), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(0, 0.02, s.shape), s.dtype)
+    return out

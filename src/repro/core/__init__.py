@@ -1,0 +1,39 @@
+"""Poplar - recoverable, partially constrained transaction logging (paper core).
+
+Public surface:
+
+* :class:`~repro.core.engine.PoplarEngine` - the paper's contribution (section 4).
+* :class:`~repro.core.engine.EngineConfig`, :class:`~repro.core.engine.Worker`
+* Baselines (sections 3.3/6.1): :class:`~repro.core.variants.CentrEngine`,
+  :class:`~repro.core.variants.SiloEngine`, :class:`~repro.core.variants.NvmDEngine`
+* :func:`~repro.core.recovery.recover` - section 5 parallel recovery.
+* :class:`~repro.core.checkpoint.CheckpointDaemon` - section 5 fuzzy checkpoints.
+* :mod:`~repro.core.levels` - section 3.1 constraint-level checkers.
+"""
+
+from .engine import EngineConfig, LoggingEngine, PoplarEngine, Worker
+from .variants import CentrEngine, NvmDEngine, SiloEngine
+from .recovery import RecoveredState, recover
+from .checkpoint import CheckpointDaemon, load_latest_checkpoint
+from .storage import DeviceSpec, StorageDevice, make_devices
+from .txn import Txn, LogRecord, decode_records
+
+__all__ = [
+    "EngineConfig",
+    "LoggingEngine",
+    "PoplarEngine",
+    "Worker",
+    "CentrEngine",
+    "SiloEngine",
+    "NvmDEngine",
+    "recover",
+    "RecoveredState",
+    "CheckpointDaemon",
+    "load_latest_checkpoint",
+    "DeviceSpec",
+    "StorageDevice",
+    "make_devices",
+    "Txn",
+    "LogRecord",
+    "decode_records",
+]

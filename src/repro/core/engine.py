@@ -1,0 +1,300 @@
+"""Poplar logging engine (paper §4) and the three-stage logging pipeline.
+
+Stages (Fig. 2):
+  * prepare    — worker allocates an SSN (Algorithm 1), reserves a slot in its
+                 mapped log buffer, memcpys the record, pushes the txn into
+                 its private Qww/Qwr;
+  * persistence — logger threads (1:1 with buffers/devices) close segments on
+                 the group-commit timer, flush ready segments, advance DSNs;
+  * commit     — workers drain their queues against DSN (Qww) / CSN (Qwr).
+
+The engine is usable in two modes:
+  * threaded — ``start()`` spawns real logger threads (benchmarks, examples);
+  * stepped  — tests call ``logger_tick(i)`` deterministically.
+
+Worker → buffer mapping is many-to-one (``worker_id % n_buffers``).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+from . import ssn as ssn_mod
+from .commit import CommitProtocol, CommitQueues
+from .log_buffer import LogBuffer
+from .storage import StorageDevice, make_devices
+from .txn import Txn
+
+
+@dataclass
+class EngineConfig:
+    n_buffers: int = 2
+    buffer_capacity: int = 30 * 1024 * 1024   # 30 MB (paper §6.1)
+    io_unit: int = 16 * 1024                  # 16 KB segment close threshold
+    flush_interval: float = 5e-3              # 5 ms group commit (paper §6.1)
+    segment_ring: int = 256
+    device_kind: str = "ssd"                  # 'ssd' | 'nvm' | 'null'
+    device_dir: Optional[str] = None          # None => in-memory durable image
+    device_clock: str = "real"                # 'real' | 'virtual'
+    logger_poll: float = 2e-4                 # logger idle poll
+
+    @staticmethod
+    def nvm(n_buffers: int = 2, device_dir: Optional[str] = None) -> "EngineConfig":
+        # §6.1: NVM runs use 1 MB buffers, flush every 5ms or 1/10 full.
+        return EngineConfig(
+            n_buffers=n_buffers,
+            buffer_capacity=1024 * 1024,
+            io_unit=1024 * 1024 // 10,
+            flush_interval=5e-3,
+            device_kind="nvm",
+            device_dir=device_dir,
+        )
+
+
+class LoggingEngine:
+    """Interface shared by Poplar and the baseline variants."""
+
+    name = "base"
+    level = "?"
+
+    def register_worker(self, worker_id: int) -> None:
+        raise NotImplementedError
+
+    def allocate(self, txn: Txn, read_items: Iterable, write_items: Sequence) -> int:
+        """Prepare-stage entry: assign a sequence number + buffer slot."""
+        raise NotImplementedError
+
+    def publish(self, txn: Txn) -> None:
+        """Finish the prepare stage: persist-or-buffer the encoded record and
+        enqueue the txn for commit."""
+        raise NotImplementedError
+
+    def drain(self, worker_id: int) -> int:
+        """Commit-stage: commit every committable txn of this worker."""
+        raise NotImplementedError
+
+    def start(self) -> None:  # pragma: no cover - trivial
+        pass
+
+    def stop(self) -> None:  # pragma: no cover - trivial
+        pass
+
+    def quiesce(self, worker_ids: Sequence[int], timeout: float = 30.0) -> None:
+        """Flush + commit everything outstanding (shutdown / test barrier)."""
+        raise NotImplementedError
+
+
+class PoplarEngine(LoggingEngine):
+    name = "poplar"
+    level = "recoverability"
+
+    def __init__(self, cfg: EngineConfig = EngineConfig(), devices: Optional[List[StorageDevice]] = None):
+        self.cfg = cfg
+        self.devices = devices or make_devices(
+            cfg.n_buffers, cfg.device_kind, cfg.device_dir, cfg.device_clock
+        )
+        assert len(self.devices) == cfg.n_buffers
+        self.buffers = [
+            LogBuffer(i, cfg.buffer_capacity, cfg.io_unit, cfg.segment_ring)
+            for i in range(cfg.n_buffers)
+        ]
+        self.commit = CommitProtocol(self.buffers)
+        self.queues: Dict[int, CommitQueues] = {}
+        self._last_force: List[float] = [time.perf_counter()] * cfg.n_buffers
+        self._threads: List[threading.Thread] = []
+        self._stop = threading.Event()
+        # perf counters
+        self.txn_logged = 0
+        self.txn_committed = 0
+        self._count_lock = threading.Lock()
+
+    # --- worker side --------------------------------------------------------
+    def register_worker(self, worker_id: int) -> None:
+        self.queues.setdefault(worker_id, CommitQueues(worker_id))
+
+    def buffer_for(self, worker_id: int) -> LogBuffer:
+        return self.buffers[worker_id % self.cfg.n_buffers]
+
+    def allocate(self, txn: Txn, read_items: Iterable, write_items: Sequence) -> int:
+        """Algorithm 1.  For write txns, reserves a slot; the caller must then
+        write the SSN back into the write set (under its OCC locks) and call
+        :meth:`publish`.
+
+        ``txn.worker_id`` must be set (use :class:`Worker`, or set it
+        directly); it determines the mapped log buffer.
+        """
+        worker_id = getattr(txn, "worker_id", txn.tid)
+        buf = self.buffer_for(worker_id)
+        txn.record = b""
+        # estimate framed length analytically to reserve before encoding
+        length = _framed_len(txn)
+        s, off, seg = ssn_mod.allocate(buf if txn.write_set else None,
+                                       read_items, write_items, length)
+        txn.ssn = s
+        if txn.write_set:
+            txn.buffer_id = buf.id
+            txn.offset = off
+            txn._seg_idx = seg  # type: ignore[attr-defined]
+        txn.t_precommit = time.perf_counter()
+        return s
+
+    def publish(self, txn: Txn) -> None:
+        q = self.queues[getattr(txn, "worker_id", txn.tid)]
+        if txn.write_set:
+            record = txn.encode()
+            assert len(record) == _framed_len(txn), (
+                f"framed length drift: {len(record)} != {_framed_len(txn)}"
+            )
+            buf = self.buffers[txn.buffer_id]
+            buf.fill(txn.offset, txn._seg_idx, record)  # type: ignore[attr-defined]
+        with self._count_lock:
+            self.txn_logged += 1
+        q.push(txn)
+
+    def drain(self, worker_id: int) -> int:
+        # On NVM-class devices (sub-5us persist) a worker flushes its own
+        # buffer inline before draining: the IO is cheaper than waiting for
+        # the logger's scheduler slot (cf. NVM-D's worker-issued mfence; for
+        # SSDs the logger thread keeps exclusive IO duty).  flush_lock makes
+        # the concurrent tick safe.
+        buf = self.buffer_for(worker_id)
+        dev = self.devices[buf.id]
+        if dev.spec.latency_s < 5e-6:
+            self.logger_tick(buf.id)
+        n = self.commit.drain(self.queues[worker_id])
+        if n:
+            with self._count_lock:
+                self.txn_committed += n
+        return n
+
+    # --- logger side ----------------------------------------------------------
+    def _emit_heartbeat(self, i: int, target_ssn: int) -> None:
+        """Advance an idle buffer's durable frontier to the global SSN
+        frontier by logging an empty (0-write) record carrying that SSN.
+
+        The paper's CSN = min(DSN) assumes every buffer sees continuous
+        traffic; an idle buffer would otherwise pin the CSN forever (liveness)
+        *and* pin RSNe at recovery (its device's last durable SSN lags).  An
+        empty record is sound: the buffer is fully flushed, so raising L.ssn
+        monotonically and persisting it cannot order any real record
+        incorrectly — subsequent allocations just start above the frontier.
+        """
+        buf = self.buffers[i]
+        hb = Txn(tid=0)
+        length = _framed_len(hb)
+        s, off, seg = buf.reserve(0, length, fixed_ssn=target_ssn)
+        hb.ssn = s
+        buf.fill(off, seg, hb.encode())
+        buf.force_establish()
+
+    def logger_tick(self, i: int, now: Optional[float] = None, force: bool = False) -> int:
+        """One iteration of logger thread ``i`` (Algorithm 2)."""
+        now = time.perf_counter() if now is None else now
+        buf = self.buffers[i]
+        if force or now - self._last_force[i] >= self.cfg.flush_interval:
+            # heartbeat an idle, fully-flushed buffer that lags the frontier
+            if len(self.buffers) > 1 and buf.pending_bytes() == 0:
+                frontier = max(b.ssn for b in self.buffers)
+                if buf.dsn < frontier:
+                    self._emit_heartbeat(i, frontier)
+            buf.force_establish()
+            self._last_force[i] = now
+        n = buf.flush_ready(self.devices[i])
+        if n:
+            self._last_force[i] = time.perf_counter()
+        self.commit.advance_csn()
+        return n
+
+    def _logger_loop(self, i: int) -> None:
+        while not self._stop.is_set():
+            flushed = self.logger_tick(i)
+            if flushed:
+                # committer assist: a group-commit daemon acks transactions
+                # as soon as the watermarks pass them (queues are locked, so
+                # helping from the logger is safe); workers still drain too.
+                for wid in list(self.queues.keys()):
+                    self.drain(wid)
+            else:
+                time.sleep(self.cfg.logger_poll)
+
+    def start(self) -> None:
+        self._stop.clear()
+        self._threads = [
+            threading.Thread(target=self._logger_loop, args=(i,), daemon=True, name=f"logger-{i}")
+            for i in range(self.cfg.n_buffers)
+        ]
+        for t in self._threads:
+            t.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=10)
+        self._threads = []
+
+    def quiesce(self, worker_ids: Sequence[int], timeout: float = 30.0) -> None:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            for i in range(self.cfg.n_buffers):
+                self.logger_tick(i, force=True)
+            pending = 0
+            for w in worker_ids:
+                self.drain(w)
+                pending += self.queues[w].pending()
+            if pending == 0 and all(b.pending_bytes() == 0 for b in self.buffers):
+                return
+            time.sleep(1e-4)
+        raise TimeoutError("engine quiesce timed out")
+
+    # --- stats -----------------------------------------------------------------
+    def stats(self) -> Dict:
+        return {
+            "engine": self.name,
+            "csn": self.commit.csn,
+            "dsn": [b.dsn for b in self.buffers],
+            "txn_logged": self.txn_logged,
+            "txn_committed": self.txn_committed,
+            "reserve_waits": sum(b.reserve_waits for b in self.buffers),
+            "devices": [d.stats() for d in self.devices],
+        }
+
+
+def _framed_len(txn: Txn) -> int:
+    # header (u32 len + u32 crc) + fixed payload (u64 ssn + u64 tid + u8 flags
+    # + u32 n_writes) + per-write (u32 klen + key + u32 vlen + val)
+    n = 8 + 21
+    for key, val in txn.write_set:
+        kb = key.encode() if isinstance(key, str) else bytes(key)
+        n += 8 + len(kb) + len(val)
+    return n
+
+
+class Worker:
+    """Thin convenience handle binding a worker id to an engine.
+
+    Drives the full per-transaction pipeline for callers that don't go
+    through the OCC layer (e.g. direct logging benchmarks):
+
+        w = Worker(engine, 3)
+        w.run(txn, read_items, write_items)   # allocate + writeback + publish
+        w.drain()
+    """
+
+    def __init__(self, engine: LoggingEngine, worker_id: int):
+        self.engine = engine
+        self.worker_id = worker_id
+        engine.register_worker(worker_id)
+
+    def run(self, txn: Txn, read_items: Sequence, write_items: Sequence) -> int:
+        txn.worker_id = self.worker_id  # type: ignore[attr-defined]
+        txn.t_start = txn.t_start or time.perf_counter()
+        s = self.engine.allocate(txn, read_items, write_items)
+        ssn_mod.writeback(s, write_items) if txn.write_set else None
+        self.engine.publish(txn)
+        return s
+
+    def drain(self) -> int:
+        return self.engine.drain(self.worker_id)

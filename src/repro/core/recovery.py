@@ -1,0 +1,147 @@
+"""Crash recovery (paper §5).
+
+Two stages:
+
+1. **Checkpoint recovery** — load the newest *valid* checkpoint; its metadata
+   carries ``RSNs`` (the CSN at checkpoint start), the starting point for log
+   replay.
+
+2. **Log recovery** — decode every device's log in parallel; compute
+   ``RSNe = min over devices of (SSN of the most recently durable record)``
+   — i.e. the crash-time CSN, since per-buffer SSNs are monotone in flush
+   order.  Replay with **last-writer-wins** (Thomas write rule, per-tuple
+   SSN guard):
+
+   * records with RAW potential (``has_reads``) are applied only if
+     ``ssn <= RSNe`` (their commit required CSN ≥ ssn);
+   * write-only (WAW-only) records are applied whenever durable, regardless
+     of RSNe (§5: they committed on their own buffer's DSN alone).
+
+   A device with *no* durable record pins RSNe to 0: its DSN never advanced,
+   so no RAW-dependent transaction can have committed.
+
+Replay across devices is order-free thanks to the per-tuple SSN guard, so
+recovery threads can process log files concurrently (tested threaded and
+sequentially — results must be identical).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .checkpoint import CheckpointData, load_latest_checkpoint
+from .storage import StorageDevice
+from .txn import LogRecord, decode_records
+
+
+@dataclass
+class RecoveredState:
+    """Recovered database image: key -> (value, ssn)."""
+
+    data: Dict[bytes, Tuple[bytes, int]] = field(default_factory=dict)
+    rsns: int = 0
+    rsne: int = 0
+    n_replayed: int = 0
+    n_skipped_uncommitted: int = 0
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        v = self.data.get(key)
+        return v[0] if v is not None else None
+
+    def ssn_of(self, key: bytes) -> int:
+        v = self.data.get(key)
+        return v[1] if v is not None else 0
+
+
+def compute_rsne(device_records: Sequence[Sequence[LogRecord]]) -> int:
+    """min over devices of the most recently durable record's SSN."""
+    rsne = None
+    for recs in device_records:
+        last = recs[-1].ssn if recs else 0
+        rsne = last if rsne is None else min(rsne, last)
+    return rsne or 0
+
+
+def _apply(state: RecoveredState, rec: LogRecord, lock: Optional[threading.Lock]) -> None:
+    for key, val in rec.writes:
+        if lock:
+            with lock:
+                cur = state.data.get(key)
+                if cur is None or rec.ssn > cur[1]:
+                    state.data[key] = (val, rec.ssn)
+        else:
+            cur = state.data.get(key)
+            if cur is None or rec.ssn > cur[1]:
+                state.data[key] = (val, rec.ssn)
+
+
+def recover(
+    devices: Sequence[StorageDevice],
+    checkpoint_dir: Optional[str] = None,
+    parallel: bool = True,
+) -> RecoveredState:
+    """Restore a consistent state from checkpoint files + device logs."""
+    state = RecoveredState()
+
+    # --- stage 1: checkpoint recovery -------------------------------------
+    ckpt: Optional[CheckpointData] = None
+    if checkpoint_dir is not None:
+        ckpt = load_latest_checkpoint(checkpoint_dir, parallel=parallel)
+    if ckpt is not None:
+        state.rsns = ckpt.rsn
+        state.data.update(ckpt.data)
+
+    # --- stage 2: log recovery --------------------------------------------
+    device_records: List[List[LogRecord]] = [[] for _ in devices]
+
+    def _load(i: int) -> None:
+        device_records[i] = decode_records(devices[i].read_all())
+
+    if parallel and len(devices) > 1:
+        threads = [threading.Thread(target=_load, args=(i,)) for i in range(len(devices))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    else:
+        for i in range(len(devices)):
+            _load(i)
+
+    rsne = compute_rsne(device_records)
+    state.rsne = rsne
+
+    lock = threading.Lock() if parallel else None
+
+    def _replay(recs: List[LogRecord]) -> Tuple[int, int]:
+        applied = skipped = 0
+        for rec in recs:
+            if rec.ssn <= state.rsns and not rec.write_only:
+                # already reflected by the checkpoint (and guard makes replay
+                # idempotent anyway) — skip as an optimization
+                pass
+            if rec.write_only or rec.ssn <= rsne:
+                _apply(state, rec, lock)
+                applied += 1
+            else:
+                skipped += 1  # durable but provably uncommitted RAW-dependent
+        return applied, skipped
+
+    results: List[Tuple[int, int]] = [(0, 0)] * len(devices)
+    if parallel and len(devices) > 1:
+        def _worker(i: int) -> None:
+            results[i] = _replay(device_records[i])
+
+        threads = [threading.Thread(target=_worker, args=(i,)) for i in range(len(devices))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    else:
+        for i, recs in enumerate(device_records):
+            results[i] = _replay(recs)
+
+    state.n_replayed = sum(r[0] for r in results)
+    state.n_skipped_uncommitted = sum(r[1] for r in results)
+    return state

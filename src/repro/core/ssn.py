@@ -1,0 +1,68 @@
+"""Scalable Sequence Number allocation (paper §4.2, Algorithm 1).
+
+The SSN of a transaction T with read set RS and write set WS, logging into
+buffer L, is the smallest number that is
+
+  (i)  larger than the SSN of every tuple in RS ∪ WS, and
+  (ii) larger than the SSN of the log buffer L,
+
+i.e. ``ssn(T) = max(max_{e∈RS∪WS} e.ssn, L.ssn) + 1``.  The new SSN is then
+written back into L and into every tuple of WS (WAR is deliberately *not*
+tracked: read-only tuples keep their SSN, so pure readers never delay
+writers — this is the key difference from NVM-D's GSN).
+
+Read-only transactions take no latch and consume no buffer slot:
+``ssn(T) = base`` (Algorithm 1 lines 16–17).
+
+The tuple side is duck-typed: anything with a mutable ``ssn`` attribute
+works (DB tuple cells in `repro.db`, state shards in `repro.journal`).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Optional, Tuple
+
+from .log_buffer import LogBuffer
+
+
+def base_ssn(read_items: Iterable, write_items: Iterable) -> int:
+    """max tuple-SSN over RS ∪ WS (Algorithm 1 lines 1–4)."""
+    base = 0
+    for e in read_items:
+        if e.ssn > base:
+            base = e.ssn
+    for e in write_items:
+        if e.ssn > base:
+            base = e.ssn
+    return base
+
+
+def allocate(
+    buffer: Optional[LogBuffer],
+    read_items: Iterable,
+    write_items: Iterable,
+    record_len: int,
+) -> Tuple[int, int, int]:
+    """Run Algorithm 1 end-to-end for a transaction.
+
+    Returns ``(ssn, offset, segment_index)``; for read-only transactions
+    (empty write set) returns ``(base, -1, -1)`` without touching the buffer.
+
+    NOTE: writing the SSN back into the write-set tuples (lines 13–15) is the
+    caller's job, because under OCC (§4.4) it must happen in the write phase
+    while the write locks are still held.
+    """
+    write_items = list(write_items)
+    base = base_ssn(read_items, write_items)
+    if not write_items:
+        return base, -1, -1
+    assert buffer is not None, "write transactions need a log buffer"
+    ssn, offset, seg_idx = buffer.reserve(base, record_len)
+    return ssn, offset, seg_idx
+
+
+def writeback(ssn: int, write_items: Iterable) -> None:
+    """Algorithm 1 lines 13–15: store the transaction's SSN into every
+    written tuple."""
+    for e in write_items:
+        e.ssn = ssn

@@ -1,0 +1,143 @@
+"""Emulated storage devices for the Poplar engine.
+
+The container has no PCIe SSDs or NVDIMMs, so devices are emulated with the
+paper's own constants (§6.1):
+
+* ``SSD``  — 1.2 GB/s peak sequential write, 21.5 µs latency per sequential
+  16 KB block write.
+* ``NVM``  — ~2x DRAM latency; modelled as a fixed per-persist latency of
+  ~0.2 µs (the paper emulates it with a busy-wait loop calibrated from PMEP).
+
+Every device supports two clock modes:
+
+* ``real``    — writes go to a backing file (durable, used by recovery tests
+  and the examples) and the emulated device time is *slept*, releasing the
+  GIL so that multi-device IO concurrency is physically real even on 1 core.
+* ``virtual`` — no sleeping; the device accumulates busy-time in a local
+  virtual clock.  Benchmarks use this to derive device-bandwidth numbers
+  (fig 6) deterministically.
+
+Write calls are serialized per device (a device has one head); this models
+the single logger-thread-per-device binding of the paper.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class DeviceSpec:
+    name: str
+    bandwidth_bytes_per_s: float
+    latency_s: float           # fixed per-write latency
+    sync_granularity: int = 1  # min bytes accounted per write
+
+    @staticmethod
+    def ssd() -> "DeviceSpec":
+        # §6.1: 1.2 GB/s sequential write, 21.5us for a 16KB block.
+        # REPRO_SSD_BW rescales bandwidth: benchmarks on this 1-core container
+        # shrink it (default 30 MB/s there) so the IO-bound regime the paper
+        # measures is reached below the GIL-bound txn rate — variant *ratios*
+        # are the reproduction target (DESIGN §9).
+        bw = float(os.environ.get("REPRO_SSD_BW", 1.2e9))
+        return DeviceSpec("ssd", bw, 21.5e-6)
+
+    @staticmethod
+    def nvm() -> "DeviceSpec":
+        # §6.1: 2x DRAM latency; ~0.2us per persist barrier (mfence+clwb scale)
+        return DeviceSpec("nvm", 20e9, 0.2e-6)
+
+    @staticmethod
+    def null() -> "DeviceSpec":
+        return DeviceSpec("null", float("inf"), 0.0)
+
+    def write_time(self, nbytes: int) -> float:
+        if self.bandwidth_bytes_per_s == float("inf"):
+            return self.latency_s
+        return self.latency_s + nbytes / self.bandwidth_bytes_per_s
+
+
+class StorageDevice:
+    """An append-only log device with emulated timing.
+
+    ``write(data)`` appends and *persists* ``data``; on return the data is
+    durable (fsync semantics).  Timing is emulated per the DeviceSpec.
+    """
+
+    def __init__(
+        self,
+        spec: DeviceSpec,
+        path: Optional[str] = None,
+        clock: str = "real",
+    ):
+        self.spec = spec
+        self.path = path
+        self.clock = clock
+        self._lock = threading.Lock()
+        self.bytes_written = 0
+        self.n_writes = 0
+        self.busy_time = 0.0       # virtual busy time (seconds)
+        self._buf: List[bytes] = []  # in-memory durable image when no path
+        self._fh = open(path, "ab") if path else None
+
+    def write(self, data: bytes) -> None:
+        """Durably append ``data``. Blocks for the emulated device time."""
+        t = self.spec.write_time(len(data))
+        with self._lock:
+            if self._fh is not None:
+                self._fh.write(data)
+                self._fh.flush()
+                os.fsync(self._fh.fileno())
+            else:
+                self._buf.append(data)
+            self.bytes_written += len(data)
+            self.n_writes += 1
+            self.busy_time += t
+        if self.clock == "real" and t > 0:
+            time.sleep(t)
+
+    def read_all(self) -> bytes:
+        """Return the full durable image (recovery path)."""
+        with self._lock:
+            if self._fh is not None:
+                self._fh.flush()
+        if self.path is not None:
+            with open(self.path, "rb") as f:
+                return f.read()
+        with self._lock:
+            return b"".join(self._buf)
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    # --- stats -----------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        return {
+            "bytes_written": self.bytes_written,
+            "n_writes": self.n_writes,
+            "busy_time_s": self.busy_time,
+            "avg_write_bytes": self.bytes_written / max(1, self.n_writes),
+        }
+
+
+def make_devices(
+    n: int,
+    kind: str = "ssd",
+    directory: Optional[str] = None,
+    clock: str = "real",
+    prefix: str = "log",
+) -> List[StorageDevice]:
+    """Create ``n`` devices of ``kind`` ('ssd' | 'nvm' | 'null')."""
+    spec = {"ssd": DeviceSpec.ssd, "nvm": DeviceSpec.nvm, "null": DeviceSpec.null}[kind]()
+    devs = []
+    for i in range(n):
+        path = os.path.join(directory, f"{prefix}_{i}.bin") if directory else None
+        devs.append(StorageDevice(spec, path=path, clock=clock))
+    return devs

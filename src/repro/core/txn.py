@@ -1,0 +1,145 @@
+"""Transaction objects and log-record framing for the Poplar engine.
+
+The paper (§2) assumes each transaction produces a single log record holding
+all of its writes.  A record here is framed as::
+
+    [u32 length][u32 crc32-of-payload][payload]
+    payload := [u64 ssn][u64 tid][u8 flags][u32 n_writes]
+               n_writes * ([u32 key_len][key bytes][u32 val_len][val bytes])
+
+``flags`` bit 0: HAS_READS — the transaction had a read set, i.e. it was
+committed through the Qwr / CSN path and carries potential RAW dependencies.
+Write-only (Qww) records may be replayed past RSNe during recovery (§5);
+records with HAS_READS may not.
+
+The length+crc framing makes torn tail writes detectable: recovery truncates
+the log at the first bad frame, which is exactly the paper's "buffer hole"
+semantics at the device level.
+"""
+
+from __future__ import annotations
+
+import struct
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+FLAG_HAS_READS = 0x01
+
+_HDR = struct.Struct("<II")           # length, crc32
+_PAYLOAD_FIXED = struct.Struct("<QQBI")  # ssn, tid, flags, n_writes
+_U32 = struct.Struct("<I")
+
+
+@dataclass
+class Txn:
+    """A transaction as seen by the logging subsystem."""
+
+    tid: int
+    # read set: list of (key, ssn observed at read time)
+    read_set: List[Tuple[Any, int]] = field(default_factory=list)
+    # write set: list of (key, new value bytes)
+    write_set: List[Tuple[Any, bytes]] = field(default_factory=list)
+
+    # Filled in by the engine:
+    ssn: int = -1
+    buffer_id: int = -1
+    offset: int = -1          # logical offset of the record in its log buffer
+    record: bytes = b""
+
+    # lifecycle timestamps (perf accounting)
+    t_start: float = 0.0
+    t_precommit: float = 0.0  # SSN allocated + record buffered ("pre-committed")
+    t_commit: float = 0.0     # durably committed
+    committed: bool = False
+    aborted: bool = False
+
+    @property
+    def has_reads(self) -> bool:
+        return bool(self.read_set)
+
+    @property
+    def write_only(self) -> bool:
+        return not self.read_set
+
+    def encode(self) -> bytes:
+        """Serialize this transaction into a single framed log record."""
+        parts = [
+            _PAYLOAD_FIXED.pack(
+                self.ssn,
+                self.tid,
+                FLAG_HAS_READS if self.has_reads else 0,
+                len(self.write_set),
+            )
+        ]
+        for key, val in self.write_set:
+            kb = key.encode() if isinstance(key, str) else bytes(key)
+            parts.append(_U32.pack(len(kb)))
+            parts.append(kb)
+            parts.append(_U32.pack(len(val)))
+            parts.append(val)
+        payload = b"".join(parts)
+        self.record = _HDR.pack(len(payload), zlib.crc32(payload)) + payload
+        return self.record
+
+
+@dataclass
+class LogRecord:
+    """A decoded log record (recovery side)."""
+
+    ssn: int
+    tid: int
+    has_reads: bool
+    writes: List[Tuple[bytes, bytes]]
+
+    @property
+    def write_only(self) -> bool:
+        return not self.has_reads
+
+
+def decode_records(buf: bytes) -> List[LogRecord]:
+    """Decode a byte stream of framed records, truncating at the first torn
+    or corrupt frame (paper §5: only fully durable records participate)."""
+    out: List[LogRecord] = []
+    off = 0
+    n = len(buf)
+    while off + _HDR.size <= n:
+        length, crc = _HDR.unpack_from(buf, off)
+        start = off + _HDR.size
+        end = start + length
+        if end > n:
+            break  # torn tail write
+        payload = buf[start:end]
+        if zlib.crc32(payload) != crc:
+            break  # corrupt frame: stop (holes never precede valid frames on
+            # a device because segments flush sequentially)
+        ssn, tid, flags, n_writes = _PAYLOAD_FIXED.unpack_from(payload, 0)
+        pos = _PAYLOAD_FIXED.size
+        writes: List[Tuple[bytes, bytes]] = []
+        ok = True
+        for _ in range(n_writes):
+            if pos + 4 > length:
+                ok = False
+                break
+            (klen,) = _U32.unpack_from(payload, pos)
+            pos += 4
+            key = payload[pos : pos + klen]
+            pos += klen
+            if pos + 4 > length:
+                ok = False
+                break
+            (vlen,) = _U32.unpack_from(payload, pos)
+            pos += 4
+            val = payload[pos : pos + vlen]
+            pos += vlen
+            writes.append((key, val))
+        if not ok:
+            break
+        out.append(LogRecord(ssn=ssn, tid=tid, has_reads=bool(flags & FLAG_HAS_READS), writes=writes))
+        off = end
+    return out
+
+
+def record_size(n_writes: int, key_bytes: int, val_bytes: int) -> int:
+    """Size of a framed record for napkin math in benchmarks."""
+    return _HDR.size + _PAYLOAD_FIXED.size + n_writes * (8 + key_bytes + val_bytes)

@@ -1,0 +1,6 @@
+"""In-memory DB substrate: tuple store, OCC (section 4.4), YCSB/TPC-C workloads."""
+
+from .table import Table, TupleCell
+from .occ import OCCWorker
+
+__all__ = ["Table", "TupleCell", "OCCWorker"]

@@ -1,0 +1,63 @@
+"""YCSB workloads (paper §6.2), scaled for this container.
+
+* dataset: single table, primary key + 10 columns of 100 B each.
+* write-only: each txn updates all 10 columns of one uniformly-random key.
+* hybrid: each txn updates one column of one key + key-range scan of fixed
+  length (the scan length controls the RAW/WAR dependency mix — Fig. 10).
+
+The paper loads 10 M rows and runs 10 M txns; defaults here are scaled down
+(100 K rows) since throughput *ratios* between logging variants are the
+reproduction target (DESIGN §9).
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Iterator, List, Optional, Tuple
+
+from .occ import OCCWorker
+from .table import Table
+
+N_COLS = 10
+COL_BYTES = 100
+
+
+def key_of(i: int) -> str:
+    return f"user{i:010d}"
+
+
+def load(table: Table, n_records: int = 100_000, seed: int = 7) -> None:
+    rng = random.Random(seed)
+    for i in range(n_records):
+        table.insert(key_of(i), rng.randbytes(N_COLS * COL_BYTES))
+
+
+class YCSBWriteOnly:
+    """Write-only workload: update all columns of one tuple."""
+
+    def __init__(self, n_records: int, seed: int = 0):
+        self.n_records = n_records
+        self.rng = random.Random(seed)
+
+    def next_txn(self, worker: OCCWorker):
+        key = key_of(self.rng.randrange(self.n_records))
+        value = self.rng.randbytes(N_COLS * COL_BYTES)
+        return worker.execute(reads=[], writes=[(key, value)])
+
+
+class YCSBHybrid:
+    """Hybrid workload: one single-column write + a fixed-length scan."""
+
+    def __init__(self, n_records: int, scan_length: int = 10, seed: int = 0):
+        self.n_records = n_records
+        self.scan_length = scan_length
+        self.rng = random.Random(seed)
+
+    def next_txn(self, worker: OCCWorker):
+        wkey = key_of(self.rng.randrange(self.n_records))
+        value = self.rng.randbytes(COL_BYTES)  # one column
+        scans = []
+        if self.scan_length > 0:
+            start = key_of(self.rng.randrange(self.n_records))
+            scans.append((start, self.scan_length))
+        return worker.execute(reads=[], writes=[(wkey, value)], scans=scans)

@@ -1,0 +1,8 @@
+"""Poplar-journaled training-state durability (the paper's technique as a
+first-class framework feature). See manager.py for the txn mapping."""
+
+from .manager import PoplarCheckpointManager, SaveHandle, flatten_state
+from .restore import restore_latest, to_pytree
+
+__all__ = ["PoplarCheckpointManager", "SaveHandle", "flatten_state",
+           "restore_latest", "to_pytree"]

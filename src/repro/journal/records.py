@@ -1,0 +1,101 @@
+"""Journal record encoding for training state.
+
+A training step maps onto Poplar transactions exactly:
+
+* each state **shard** (a pytree leaf, optionally split into slices) is a
+  *tuple* with its own SSN;
+* writing a shard's bytes for step N is a **write-only transaction** (Qww):
+  it is durable/committed as soon as its own lane's DSN covers it — no
+  cross-lane coordination (the paper's central point);
+* the **step marker** is a read-write transaction (Qwr) whose read set is
+  every shard it must see durable: it commits only when ``ssn <= CSN``,
+  i.e. when every lane has persisted everything the step depends on.  A
+  committed marker == "step N is restorable", with no global barrier ever
+  taken on the write path.
+
+Record keys:
+  ``{step:016d}/{path}#{slice}/{nslices}`` — shard payload
+  ``STEP/{step:016d}``                     — step marker (value: metadata)
+
+Payload: little-endian header (dtype str, ndim, dims) + raw array bytes.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_HDR = struct.Struct("<16sB")
+_U32 = struct.Struct("<I")
+
+
+def _dtype_name(dt: np.dtype) -> str:
+    # ml_dtypes types (bfloat16, float8_*) stringify as void ('|V2') via
+    # .str; .name keeps their identity
+    return dt.name
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def encode_array(arr: np.ndarray) -> bytes:
+    # NB: np.ascontiguousarray would promote 0-d arrays to 1-d
+    arr = np.asarray(arr, order="C")
+    dt = _dtype_name(arr.dtype).encode().ljust(16, b"\0")
+    parts = [_HDR.pack(dt, arr.ndim)]
+    for d in arr.shape:
+        parts.append(_U32.pack(d))
+    parts.append(arr.tobytes())
+    return b"".join(parts)
+
+
+def decode_array(buf: bytes) -> np.ndarray:
+    dt_raw, ndim = _HDR.unpack_from(buf, 0)
+    dtype = _resolve_dtype(dt_raw.rstrip(b"\0").decode())
+    pos = _HDR.size
+    shape = []
+    for _ in range(ndim):
+        (d,) = _U32.unpack_from(buf, pos)
+        shape.append(d)
+        pos += 4
+    return np.frombuffer(buf, dtype=dtype, offset=pos).reshape(shape)
+
+
+def shard_key(step: int, path: str, slice_idx: int, n_slices: int) -> str:
+    return f"{step:016d}/{path}#{slice_idx}/{n_slices}"
+
+
+def marker_key(step: int) -> str:
+    return f"STEP/{step:016d}"
+
+
+def parse_key(key: str) -> Dict[str, Any]:
+    if key.startswith("STEP/"):
+        return {"kind": "marker", "step": int(key[5:])}
+    step_s, rest = key.split("/", 1)
+    path, sl = rest.rsplit("#", 1)
+    idx, n = sl.split("/")
+    return {"kind": "shard", "step": int(step_s), "path": path,
+            "slice": int(idx), "n_slices": int(n)}
+
+
+def split_slices(arr: np.ndarray, n_slices: int) -> List[np.ndarray]:
+    """Split along the leading dim (or no-op for scalars / n=1)."""
+    if n_slices <= 1 or arr.ndim == 0 or arr.shape[0] < n_slices:
+        return [arr]
+    return np.array_split(arr, n_slices, axis=0)
+
+
+def join_slices(parts: Sequence[np.ndarray]) -> np.ndarray:
+    if len(parts) == 1:
+        return parts[0]
+    return np.concatenate(parts, axis=0)

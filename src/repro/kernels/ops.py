@@ -1,0 +1,52 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled (interpret=False); on CPU (this container)
+they execute in interpret mode — same kernel body, Python-evaluated — so
+correctness is CI-testable without hardware.  ``interpret=None`` selects
+automatically from the default backend.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_fwd
+from .rwkv6 import rwkv6_chunked
+from .ssm_scan import ssm_scan_chunked
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    """q (B,Hq,S,D); k/v (B,Hkv,T,D) -> (B,Hq,S,D)."""
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=_auto_interpret(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(x, dt, decay, bmat, cmat, *, chunk: int = 64,
+             interpret: Optional[bool] = None):
+    """Chunked selective scan: returns (y, final_state)."""
+    return ssm_scan_chunked(
+        x, dt, decay, bmat, cmat, chunk=chunk, interpret=_auto_interpret(interpret)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6(r, k, v, w, u, *, chunk: int = 32, interpret: Optional[bool] = None):
+    """Chunked wkv6: returns (y, final_state)."""
+    return rwkv6_chunked(r, k, v, w, u, chunk=chunk, interpret=_auto_interpret(interpret))

@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real step function (train_step / prefill /
+serve decode_step), lowers it against ShapeDtypeStruct stand-ins with the
+production shardings, compiles it, and extracts:
+
+  * ``memory_analysis()``   — per-device argument/output/temp bytes (fit proof)
+  * ``cost_analysis()``     — per-device HLO FLOPs + bytes accessed
+  * collective traffic     — parsed from the compiled HLO (per-device bytes)
+  * roofline terms         — seconds on TPU v5e constants (see ROOFLINE)
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out benchmarks/results
+
+Results are written as one JSON per cell into ``--out`` (default
+``benchmarks/results``); ``benchmarks/roofline.py`` renders the table.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link (conservative single-link)
+
+
+def build_cell(arch: str, shape_name: str, policy: str, *,
+               attn_impl: Optional[str] = None,
+               mixer_impl: Optional[str] = None,
+               remat: str = "none",
+               accum_steps: int = 1,
+               moe_group: Optional[int] = None):
+    """Returns (fn, args_sds, in_shardings, out_shardings, donate, meta)."""
+    import dataclasses
+
+    from ..configs.base import SHAPES
+    from ..configs.registry import cell_applicable, get_config, input_specs
+    from ..models.api import build_model
+    from ..models.common import specs_to_sds
+    from ..optim import adamw
+    from ..parallel import axes as axes_mod
+    from ..parallel import sharding as shd
+    from ..train.step import make_train_step
+
+    cfg = get_config(arch)
+    if attn_impl:
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    if mixer_impl:
+        cfg = dataclasses.replace(cfg, mixer_impl=mixer_impl)
+    if moe_group and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, group_size=moe_group)
+        )
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return None, why, cfg, shape
+
+    model = build_model(cfg, remat_policy=remat)
+    pspecs = model.param_specs()
+    params_sds = specs_to_sds(pspecs)
+    batch_sds = input_specs(cfg, shape)
+
+    def shardings(mesh):
+        param_sh = shd.tree_shardings(pspecs, mesh, policy)
+        batch_sh = shd.batch_shardings(batch_sds, mesh, policy)
+        return param_sh, batch_sh
+
+    if shape.phase == "train":
+        opt_cfg = adamw.AdamWConfig(
+            moment_dtype=jnp.bfloat16 if cfg.opt_moment_dtype == "bfloat16" else jnp.float32
+        )
+        opt_specs = adamw.opt_state_specs(pspecs, opt_cfg)
+        opt_sds = specs_to_sds(opt_specs)
+        step = make_train_step(model, opt_cfg, accum_steps=accum_steps)
+
+        def make(mesh):
+            param_sh, batch_sh = shardings(mesh)
+            opt_sh = shd.tree_shardings(opt_specs, mesh, policy)
+            rep = shd.replicated(mesh)
+            metrics_sh = {"grad_norm": rep, "lr": rep, "loss": rep}
+
+            def wrapped(params, opt_state, batch):
+                with axes_mod.logical_context(mesh, policy):
+                    return step(params, opt_state, batch)
+
+            jitted = jax.jit(
+                wrapped,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, metrics_sh),
+                donate_argnums=(0, 1),
+            )
+            return jitted, (params_sds, opt_sds, batch_sds)
+
+        meta = {"phase": "train", "fn": "train_step"}
+
+    elif shape.phase == "prefill":
+        cache_len = shape.seq_len
+
+        def prefill(params, batch):
+            return model.prefill(params, batch, cache_len)
+
+        cache_specs = model.cache_specs(shape.global_batch, cache_len)
+
+        def make(mesh):
+            param_sh, batch_sh = shardings(mesh)
+            cache_sh = shd.tree_shardings(cache_specs, mesh, policy)
+            rep = shd.replicated(mesh)
+
+            def wrapped(params, batch):
+                with axes_mod.logical_context(mesh, policy):
+                    return prefill(params, batch)
+
+            jitted = jax.jit(
+                wrapped,
+                in_shardings=(param_sh, batch_sh),
+                out_shardings=(rep, cache_sh),
+            )
+            return jitted, (params_sds, batch_sds)
+
+        meta = {"phase": "prefill", "fn": "prefill"}
+
+    else:  # decode
+        cache_len = shape.seq_len
+        cache_specs = model.cache_specs(shape.global_batch, cache_len)
+        cache_sds = specs_to_sds(cache_specs)
+
+        def serve_step(params, caches, batch):
+            return model.decode_step(params, caches, batch["tokens"], batch["pos"])
+
+        def make(mesh):
+            param_sh, batch_sh = shardings(mesh)
+            cache_sh = shd.tree_shardings(cache_specs, mesh, policy)
+            rep = shd.replicated(mesh)
+
+            def wrapped(params, caches, batch):
+                with axes_mod.logical_context(mesh, policy):
+                    return serve_step(params, caches, batch)
+
+            jitted = jax.jit(
+                wrapped,
+                in_shardings=(param_sh, cache_sh, batch_sh),
+                out_shardings=(rep, cache_sh),
+                donate_argnums=(1,),
+            )
+            return jitted, (params_sds, cache_sds, batch_sds)
+
+        meta = {"phase": "decode", "fn": "serve_step"}
+
+    return make, meta, cfg, shape
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D train, 2·N_active·D inference."""
+    n = cfg.n_active_params()
+    mult = 6.0 if shape.phase == "train" else 2.0
+    toks = shape.tokens if shape.phase != "decode" else shape.global_batch
+    return mult * n * toks
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, policy: str,
+             out_dir: str, tag: str = "baseline", **kw) -> Dict[str, Any]:
+    from .mesh import make_production_mesh
+    from ..parallel import hlo_analysis
+
+    t0 = time.time()
+    made = build_cell(arch, shape_name, policy, **kw)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "policy": policy, "tag": tag, **{k: v for k, v in kw.items() if v},
+    }
+    if made[0] is None:
+        result["status"] = "skipped"
+        result["reason"] = made[1]
+        _write(out_dir, result, tag)
+        return result
+
+    make, meta, cfg, shape = made
+    result.update(meta)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    try:
+        with jax.set_mesh(mesh):
+            jitted, args = make(mesh)
+            t1 = time.time()
+            lowered = jitted.lower(*args)
+            t2 = time.time()
+            compiled = lowered.compile()
+            t3 = time.time()
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        # Full HLO cost model with while-trip multiplication (XLA's own
+        # cost_analysis counts loop bodies once — see hlo_analysis docstring).
+        cost = hlo_analysis.analyze_hlo(hlo)
+        colls = cost.collectives
+        coll_traffic = cost.collective_traffic
+
+        flops_dev = float(cost.dot_flops)
+        bytes_dev = float(cost.traffic_bytes)
+        mf = model_flops(cfg, shape)
+
+        compute_s = flops_dev * n_chips / (n_chips * PEAK_FLOPS)
+        memory_s = bytes_dev * n_chips / (n_chips * HBM_BW)
+        # TPU-corrected memory term: excludes bf16<->f32 convert churn the
+        # CPU backend inserts around every bf16 dot (absent on TPU/MXU)
+        memory_tpu_s = (bytes_dev - cost.convert_traffic) / HBM_BW
+        collective_s = coll_traffic / LINK_BW
+
+        result.update({
+            "status": "ok",
+            "n_chips": n_chips,
+            "lower_s": round(t2 - t1, 2),
+            "compile_s": round(t3 - t2, 2),
+            "hlo_bytes": len(hlo),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_gb": round(
+                    (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 1e9, 3),
+            },
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "xla_cost_analysis": {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes accessed": float(ca.get("bytes accessed", 0.0)),
+                "note": "loop bodies counted once by XLA; see flops_per_device",
+            },
+            "while_trips": cost.while_trips,
+            "unknown_trip_whiles": cost.unknown_trip_whiles,
+            "collectives": colls,
+            "collective_traffic_per_device": coll_traffic,
+            "collective_traffic_raw": cost.collective_traffic_raw,
+            "tpu_dtype_correction": "f32 dot-partial ARs counted at bf16 width (CPU backend upcasts bf16 dots; jaxpr requests bf16 - see hlo_analysis)",
+            "model_flops_global": mf,
+            "model_flops_per_device": mf / n_chips,
+            "useful_flop_ratio": round(mf / n_chips / flops_dev, 4) if flops_dev else None,
+            "convert_traffic_per_device": cost.convert_traffic,
+            "roofline": {
+                "compute_s": compute_s,
+                "memory_s": memory_s,
+                "memory_tpu_s": memory_tpu_s,
+                "collective_s": collective_s,
+                "bottleneck": max(
+                    ("compute", compute_s), ("memory", memory_tpu_s),
+                    ("collective", collective_s), key=lambda kv: kv[1])[0],
+                "step_s_lower_bound": max(compute_s, memory_tpu_s, collective_s),
+                "step_s_lower_bound_raw": max(compute_s, memory_s, collective_s),
+            },
+        })
+    except Exception as e:  # noqa: BLE001 - report the cell failure verbatim
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    result["total_s"] = round(time.time() - t0, 2)
+    _write(out_dir, result, tag)
+    return result
+
+
+def _write(out_dir: str, result: Dict[str, Any], tag: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}__{tag}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(result, f, indent=1, default=str)
+
+
+def main(argv=None) -> int:
+    from ..configs.base import SHAPES
+    from ..configs.registry import ARCH_NAMES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--policy", default=None, help="sharding policy (default: train/serve by phase)")
+    ap.add_argument("--all", action="store_true", help="sweep all arch x shape cells")
+    ap.add_argument("--out", default="benchmarks/results")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=[None, "masked_scan", "triangular", "flash"])
+    ap.add_argument("--mixer-impl", default=None, choices=[None, "scan", "chunked"])
+    ap.add_argument("--remat", default="none", choices=["none", "dots", "full"])
+    ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--moe-group", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    archs = list(ARCH_NAMES) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            phase = SHAPES[shape_name].phase
+            policy = args.policy or ("train" if phase == "train" else "serve")
+            for mesh_kind in meshes:
+                r = run_cell(
+                    arch, shape_name, mesh_kind, policy, args.out, tag=args.tag,
+                    attn_impl=args.attn_impl, mixer_impl=args.mixer_impl,
+                    remat=args.remat,
+                    accum_steps=args.accum_steps, moe_group=args.moe_group,
+                )
+                line = {
+                    "ok": lambda: (
+                        f"OK   {arch:24s} {shape_name:12s} {mesh_kind:6s} "
+                        f"compile={r['compile_s']:7.1f}s peak={r['memory']['peak_gb']:7.2f}GB "
+                        f"bottleneck={r['roofline']['bottleneck']:10s} "
+                        f"step>={r['roofline']['step_s_lower_bound']:.4f}s"
+                    ),
+                    "skipped": lambda: f"SKIP {arch:24s} {shape_name:12s} {mesh_kind:6s} {r['reason'][:60]}",
+                    "error": lambda: f"FAIL {arch:24s} {shape_name:12s} {mesh_kind:6s} {r['error'][:120]}",
+                }[r["status"]]()
+                print(line, flush=True)
+                if r["status"] == "error":
+                    failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,53 @@
+"""Unified model API: ``build_model(cfg)`` -> a Model with
+
+    param_specs()                      -> ParamSpec tree
+    init(rng)                          -> real params (smoke/small-scale)
+    train_loss(params, batch)          -> scalar
+    prefill(params, batch, cache_len)  -> (last_logits, caches)
+    decode_step(params, caches, tokens, pos) -> (logits, caches)
+    cache_specs(batch, cache_len)      -> ParamSpec tree for decode caches
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from ..configs.base import ArchConfig
+from .common import init_params
+from .encdec import EncDecLM
+from .lm import LM
+
+
+class Model:
+    def __init__(self, impl, cfg: ArchConfig):
+        self._impl = impl
+        self.cfg = cfg
+
+    def param_specs(self):
+        return self._impl.param_specs()
+
+    def init(self, rng: jax.Array):
+        return init_params(self.param_specs(), rng)
+
+    def init_cache(self, rng: jax.Array, batch: int, cache_len: int):
+        return init_params(self.cache_specs(batch, cache_len), rng)
+
+    def train_loss(self, params, batch):
+        return self._impl.train_loss(params, batch)
+
+    def prefill(self, params, batch, cache_len: int):
+        return self._impl.prefill(params, batch, cache_len)
+
+    def decode_step(self, params, caches, tokens, pos):
+        return self._impl.decode_step(params, caches, tokens, pos)
+
+    def cache_specs(self, batch: int, cache_len: int):
+        return self._impl.cache_specs(batch, cache_len)
+
+
+def build_model(cfg: ArchConfig, remat_policy: str = "none") -> Model:
+    if cfg.enc_dec is not None:
+        return Model(EncDecLM(cfg, remat_policy), cfg)
+    return Model(LM(cfg, remat_policy), cfg)

@@ -1,0 +1,313 @@
+"""Attention: GQA with RoPE, causal/sliding-window masks, two chunked
+implementations (memory-safe at 32k+ sequure), and decode-time cache reads.
+
+Implementations (selected by ``ArchConfig.attn_impl``):
+
+* ``masked_scan`` — baseline: ``lax.scan`` over KV chunks with an online
+  softmax.  HLO is tiny (one inner body) but causal masking wastes ~2x FLOPs
+  (every q attends every kv chunk, masked).  This is the paper-faithful-era
+  baseline the roofline hillclimb starts from.
+
+* ``triangular`` — optimized: python-unrolled q chunks, each attending only
+  its causal prefix (or its sliding-window span, statically sliced), halving
+  attention FLOPs at the cost of a larger (still bounded) HLO.
+
+Shapes: q (B, S, H, D); k/v (B, T, Hkv, D).  GQA via reshape to
+(B, S, Hkv, G, D) with G = H // Hkv.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _split_gqa(q: jax.Array, n_kv: int) -> jax.Array:
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def _softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def attend(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    impl: str = "masked_scan",
+    chunk_q: int = 512,
+    chunk_k: int = 1024,
+    logit_softcap: Optional[float] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill).
+
+    ``q_offset`` — absolute position of q[0] relative to k[0] (used when the
+    query block sits at the end of a longer kv sequence, e.g. vlm prefixes).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    n_kv = k.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    qg = _split_gqa(q, n_kv) * scale
+
+    if impl == "triangular" and causal:
+        return _attend_triangular(qg, k, v, window, chunk_q, logit_softcap, q_offset)
+    if impl == "flash":
+        out = _flash(qg, k, v, causal, window, chunk_k, logit_softcap, q_offset)
+        return out.reshape(b, s, h, d).astype(v.dtype)
+    return _attend_masked_scan(qg, k, v, causal, window, chunk_k, logit_softcap, q_offset)
+
+
+def _attend_masked_scan(qg, k, v, causal, window, chunk_k, logit_softcap, q_offset):
+    b, s, n_kv, g, d = qg.shape
+    t = k.shape[1]
+    ck = min(chunk_k, t)
+    n_chunks = (t + ck - 1) // ck
+    pad = n_chunks * ck - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, ck, n_kv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, ck, n_kv, d).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(s)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        kv_pos = j * ck + jnp.arange(ck)
+        # scores: (b, s, n_kv, g, ck)
+        scores = jnp.einsum(
+            "bsngd,bcnd->bsngc", qg.astype(jnp.float32), kj.astype(jnp.float32)
+        )
+        scores = _softcap(scores, logit_softcap)
+        # mask: causal / window / kv padding (pad slots sit at positions >= t)
+        mask = (kv_pos < t)[None, :] & jnp.ones((s, 1), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - kv_pos[None, :] < window
+        scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bsngc,bcnd->bsngd", p, vj.astype(jnp.float32))
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, n_kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, n_kv, g), jnp.float32)
+    a0 = jnp.zeros((b, s, n_kv, g, d), jnp.float32)
+    js = jnp.arange(n_chunks)
+    # checkpoint the chunk body: scan-AD otherwise saves every chunk's
+    # (s x ck) probability matrix — the dominant HBM buffer at 32k prefill
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, js))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, s, n_kv * g, d).astype(v.dtype)
+
+
+def _attend_triangular(qg, k, v, window, chunk_q, logit_softcap, q_offset):
+    """Python-unrolled q chunks; each chunk sees only its causal span."""
+    b, s, n_kv, g, d = qg.shape
+    t = k.shape[1]
+    cq = min(chunk_q, s)
+    outs = []
+    for qs in range(0, s, cq):
+        qe = min(qs + cq, s)
+        q_blk = qg[:, qs:qe]
+        abs_start, abs_end = q_offset + qs, q_offset + qe  # absolute kv span
+        k_end = min(abs_end, t)
+        k_start = 0 if window is None else max(0, abs_start - window + 1)
+        k_blk = k[:, k_start:k_end]
+        v_blk = v[:, k_start:k_end]
+        scores = jnp.einsum(
+            "bsngd,bcnd->bsngc", q_blk.astype(jnp.float32), k_blk.astype(jnp.float32)
+        )
+        scores = _softcap(scores, logit_softcap)
+        q_pos = abs_start + jnp.arange(qe - qs)
+        kv_pos = k_start + jnp.arange(k_end - k_start)
+        mask = q_pos[:, None] >= kv_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - kv_pos[None, :] < window
+        scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+        out = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bsngc,bcnd->bsngd", out, v_blk.astype(jnp.float32))
+        outs.append(out)
+    out = jnp.concatenate(outs, axis=1)
+    return out.reshape(b, s, n_kv * g, d).astype(v.dtype)
+
+
+def attend_bidir(
+    q: jax.Array, k: jax.Array, v: jax.Array, chunk_k: int = 1024,
+) -> jax.Array:
+    """Bidirectional attention (encoder / cross-attention)."""
+    return attend(q, k, v, causal=False, impl="masked_scan", chunk_k=chunk_k)
+
+
+# --- flash (custom-vjp online softmax): O(S) memory fwd AND bwd ----------------
+#
+# The masked_scan baseline lets scan-AD save per-chunk probability matrices
+# (or full-q accumulator carries), which is what blows up train-cell HBM
+# (EXPERIMENTS §Perf, iteration 1).  The flash path saves only (out, m, l)
+# and rebuilds p per kv chunk in the backward — the FlashAttention backward,
+# in pure JAX.  The Pallas kernel (kernels/flash_attention.py) is the TPU
+# runtime twin of the forward; this path makes the *compiled HLO* exhibit
+# the same memory behaviour for the dry-run roofline.
+
+def _chunk_scores(qg, kj, kv_pos, q_pos, causal, window, softcap, t):
+    s = jnp.einsum("bsngd,bcnd->bsngc", qg, kj.astype(jnp.float32))
+    ds_dsraw = None
+    if softcap is not None:
+        th = jnp.tanh(s / softcap)
+        ds_dsraw = 1.0 - th * th
+        s = softcap * th
+    mask = (kv_pos < t)[None, :] & jnp.ones((q_pos.shape[0], 1), dtype=bool)
+    if causal:
+        mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+    if window is not None:
+        mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    return s, ds_dsraw
+
+
+def _flash_chunks(k, chunk_k):
+    b, t, n_kv, d = k.shape
+    ck = min(chunk_k, t)
+    n_chunks = (t + ck - 1) // ck
+    pad = n_chunks * ck - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return k.reshape(b, n_chunks, ck, n_kv, d).transpose(1, 0, 2, 3, 4), ck, n_chunks
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(qg, k, v, causal, window, chunk_k, softcap, q_offset):
+    out, _, _ = _flash_fwd_core(qg, k, v, causal, window, chunk_k, softcap, q_offset)
+    return out
+
+
+def _flash_fwd_core(qg, k, v, causal, window, chunk_k, softcap, q_offset):
+    b, s, n_kv, g, d = qg.shape
+    t = k.shape[1]
+    kc, ck, n_chunks = _flash_chunks(k, chunk_k)
+    vc, _, _ = _flash_chunks(v, chunk_k)
+    q_pos = q_offset + jnp.arange(s)
+    qf = qg.astype(jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        kv_pos = j * ck + jnp.arange(ck)
+        sc, _ = _chunk_scores(qf, kj, kv_pos, q_pos, causal, window, softcap, t)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bsngc,bcnd->bsngd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc * alpha[..., None] + pv), None
+
+    m0 = jnp.full((b, s, n_kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, n_kv, g), jnp.float32)
+    a0 = jnp.zeros((b, s, n_kv, g, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out, m, l
+
+
+def _flash_vjp_fwd(qg, k, v, causal, window, chunk_k, softcap, q_offset):
+    out, m, l = _flash_fwd_core(qg, k, v, causal, window, chunk_k, softcap, q_offset)
+    return out, (qg, k, v, out, m, l)
+
+
+def _flash_vjp_bwd(causal, window, chunk_k, softcap, q_offset, res, do):
+    qg, k, v, out, m, l = res
+    b, s, n_kv, g, d = qg.shape
+    t = k.shape[1]
+    kc, ck, n_chunks = _flash_chunks(k, chunk_k)
+    vc, _, _ = _flash_chunks(v, chunk_k)
+    q_pos = q_offset + jnp.arange(s)
+    qf = qg.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    lsafe = jnp.maximum(l, 1e-30)
+    # D = sum_d do ⊙ out  (per query)
+    dsum = jnp.einsum("bsngd,bsngd->bsng", dof, out)
+
+    def body(dq, xs):
+        kj, vj, j = xs
+        kv_pos = j * ck + jnp.arange(ck)
+        sc, dcap = _chunk_scores(qf, kj, kv_pos, q_pos, causal, window, softcap, t)
+        p = jnp.exp(sc - m[..., None]) / lsafe[..., None]         # normalized
+        dp = jnp.einsum("bsngd,bcnd->bsngc", dof, vj.astype(jnp.float32))
+        ds = p * (dp - dsum[..., None])
+        if dcap is not None:
+            ds = ds * dcap
+        dq = dq + jnp.einsum("bsngc,bcnd->bsngd", ds, kj.astype(jnp.float32))
+        dkj = jnp.einsum("bsngc,bsngd->bcnd", ds, qf)
+        dvj = jnp.einsum("bsngc,bsngd->bcnd", p, dof)
+        return dq, (dkj, dvj)
+
+    dq0 = jnp.zeros_like(qf)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (kc, vc, jnp.arange(n_chunks)))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * ck, n_kv, d)[:, :t]
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * ck, n_kv, d)[:, :t]
+    return dq.astype(qg.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def decode_attend(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_len: jax.Array,
+    *,
+    tail_valid: int = 0,
+    valid_mask: Optional[jax.Array] = None,
+    logit_softcap: Optional[float] = None,
+) -> jax.Array:
+    """Single-step decode attention against a cache.
+
+    q: (B, 1, H, D); caches: (B, W, Hkv, D); cur_len: () int32 — number of
+    valid cache entries counted from the front (for a ring cache,
+    min(pos, W): all slots valid once wrapped).  ``tail_valid``: the last n
+    positions are always valid — used when the current token's k/v is
+    appended after the cache (it must be attendable even though the cache
+    prefix isn't full yet).  ``valid_mask``: precomputed per-slot validity
+    (overrides cur_len; used for sliding-window slot-staleness masking).
+    """
+    b, _, h, d = q.shape
+    w = k_cache.shape[1]
+    n_kv = k_cache.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    qg = _split_gqa(q, n_kv)[:, 0] * scale          # (B, n_kv, G, D)
+    scores = jnp.einsum(
+        "bngd,bcnd->bngc", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    )
+    scores = _softcap(scores, logit_softcap)
+    idx = jnp.arange(w)
+    if valid_mask is not None:
+        valid = valid_mask
+    else:
+        valid = idx < cur_len
+    if tail_valid:
+        valid = valid | (idx >= w - tail_valid)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngc,bcnd->bngd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, n_kv * (h // n_kv), d).astype(v_cache.dtype)

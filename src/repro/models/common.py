@@ -1,0 +1,137 @@
+"""Shared model building blocks: param specs, norms, RoPE, initializers.
+
+Parameters are described by :class:`ParamSpec` trees (shape, dtype, logical
+sharding axes).  The dry-run lowers against ``jax.ShapeDtypeStruct`` leaves;
+smoke tests materialize real arrays via :func:`init_params`.
+
+Logical axis names (mapped to mesh axes by ``repro.parallel.sharding``):
+  "vocab"   — vocabulary dim (TP)
+  "embed"   — d_model dim (FSDP target)
+  "heads"   — attention-head dim (TP)
+  "kv_heads"— kv-head dim
+  "head_dim"— per-head feature dim (TP fallback when heads don't divide)
+  "mlp"     — FFN hidden dim (TP)
+  "expert"  — MoE expert dim
+  "layers"  — stacked-scan layer dim (never sharded)
+  None      — replicated
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"       # 'normal' | 'zeros' | 'ones' | 'decay'
+    init_scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def stack_specs(spec_tree, n: int):
+    """Prepend a stacked 'layers' dim of size n to every leaf (scan groups)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical, s.dtype, s.init, s.init_scale),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def specs_to_sds(spec_tree):
+    return jax.tree.map(
+        lambda s: s.sds(), spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def init_params(spec_tree, rng: jax.Array):
+    """Materialize real parameters for smoke tests / small-scale training."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for spec, r in zip(leaves, rngs):
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, spec.dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, spec.dtype)
+        elif spec.init == "decay":
+            # rwkv/ssm decay-style init: small negatives
+            arr = (-0.5 - jax.random.uniform(r, spec.shape)).astype(spec.dtype)
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = spec.init_scale / math.sqrt(max(1, fan_in))
+            arr = (jax.random.normal(r, spec.shape, jnp.float32) * std).astype(spec.dtype)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+# --- norms -----------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_spec(cfg, d: int) -> Dict[str, ParamSpec]:
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamSpec((d,), (None,), jnp.float32, "ones"),
+            "bias": ParamSpec((d,), (None,), jnp.float32, "zeros"),
+        }
+    return {"scale": ParamSpec((d,), (None,), jnp.float32, "ones")}
+
+
+def apply_norm(cfg, p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+# --- rotary position embeddings ---------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    sin = jnp.sin(angles)[..., None, :]                # (..., S, 1, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def dense_spec(d_in: int, d_out: int, logical: Tuple[Optional[str], Optional[str]],
+               dtype=jnp.bfloat16, init_scale: float = 1.0) -> ParamSpec:
+    return ParamSpec((d_in, d_out), logical, dtype, "normal", init_scale)

@@ -1,0 +1,225 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub:
+``input_specs()`` supplies precomputed frame embeddings (B, F, d_model);
+the conv1d+mel frontend is out of scope per the assignment).
+
+Encoder: bidirectional pre-LN blocks (LayerNorm + gelu MLP), learned-free
+sinusoidal positions folded into the stub embeddings.
+Decoder: causal self-attention + cross-attention over encoder output + MLP.
+
+Decode caches: per decoder layer — self-attn ring cache + cross-attn K/V
+(computed once from the encoder output during ``prefill``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as attn_mod
+from .common import ParamSpec, apply_norm, apply_rope, dense_spec, norm_spec, stack_specs
+from .ffn import mlp_fwd, mlp_spec
+from .lm import chunked_xent, attn_spec
+from ..parallel.axes import constrain
+
+
+def _enc_block_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": norm_spec(cfg, cfg.d_model),
+        "attn": attn_spec(cfg),
+        "ln2": norm_spec(cfg, cfg.d_model),
+        "mlp": mlp_spec(cfg.d_model, cfg.d_ff, style="gelu2"),
+    }
+
+
+def _dec_block_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": norm_spec(cfg, cfg.d_model),
+        "self_attn": attn_spec(cfg),
+        "ln_x": norm_spec(cfg, cfg.d_model),
+        "cross_attn": attn_spec(cfg),
+        "ln2": norm_spec(cfg, cfg.d_model),
+        "mlp": mlp_spec(cfg.d_model, cfg.d_ff, style="gelu2"),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    assert cfg.enc_dec is not None
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+        "enc": stack_specs(_enc_block_spec(cfg), cfg.enc_dec.enc_layers),
+        "enc_norm": norm_spec(cfg, cfg.d_model),
+        "dec": stack_specs(_dec_block_spec(cfg), cfg.n_layers),
+        "final_norm": norm_spec(cfg, cfg.d_model),
+        "unembed": dense_spec(cfg.d_model, cfg.vocab, ("embed", "vocab")),
+    }
+
+
+def _proj_qkv(cfg, p, xq, xkv, positions_q=None, positions_kv=None):
+    b, s, d = xq.shape
+    t = xkv.shape[1]
+    hd = cfg.hd
+    q = jnp.einsum("bsd,de->bse", xq, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,de->bse", xkv, p["wk"]).reshape(b, t, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,de->bse", xkv, p["wv"]).reshape(b, t, cfg.n_kv_heads, hd)
+    if positions_q is not None:
+        q = apply_rope(q, positions_q, cfg.rope_theta)
+    if positions_kv is not None:
+        k = apply_rope(k, positions_kv, cfg.rope_theta)
+    return q, k, v
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig, remat_policy: str = "none"):
+        self.cfg = cfg
+        self.remat_policy = remat_policy
+
+    def param_specs(self):
+        return param_specs(self.cfg)
+
+    def _remat(self, fn):
+        if self.remat_policy == "full":
+            return fn
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    # --- encoder ------------------------------------------------------------
+    def encode(self, params, frame_embeds: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = frame_embeds
+
+        def block(p, xx):
+            xn = apply_norm(cfg, p["ln1"], xx)
+            q, k, v = _proj_qkv(cfg, p["attn"], xn, xn)
+            a = attn_mod.attend_bidir(q, k, v, chunk_k=cfg.attn_chunk_k)
+            b_, s_, _, _ = q.shape
+            xx = xx + jnp.einsum("bse,ed->bsd", a.reshape(b_, s_, -1), p["attn"]["wo"])
+            return xx + mlp_fwd(p["mlp"], apply_norm(cfg, p["ln2"], xx), style="gelu2")
+
+        fn = self._remat(lambda p, xx: constrain(block(p, xx), ("batch", None, None)))
+
+        def body(xx, p):
+            return fn(p, xx), None
+
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return apply_norm(cfg, params["enc_norm"], x)
+
+    # --- decoder ----------------------------------------------------------------
+    def _dec_block_full(self, p, x, enc_out, positions):
+        cfg = self.cfg
+        xn = apply_norm(cfg, p["ln1"], x)
+        q, k, v = _proj_qkv(cfg, p["self_attn"], xn, xn, positions, positions)
+        a = attn_mod.attend(q, k, v, causal=True, impl=cfg.attn_impl,
+                            chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k)
+        b_, s_, _, _ = q.shape
+        x = x + jnp.einsum("bse,ed->bsd", a.reshape(b_, s_, -1), p["self_attn"]["wo"])
+        xn = apply_norm(cfg, p["ln_x"], x)
+        q, k, v = _proj_qkv(cfg, p["cross_attn"], xn, enc_out)
+        a = attn_mod.attend_bidir(q, k, v, chunk_k=cfg.attn_chunk_k)
+        x = x + jnp.einsum("bse,ed->bsd", a.reshape(b_, s_, -1), p["cross_attn"]["wo"])
+        return x + mlp_fwd(p["mlp"], apply_norm(cfg, p["ln2"], x), style="gelu2")
+
+    def train_loss(self, params, batch) -> jax.Array:
+        enc_out = self.encode(params, batch["frame_embeds"])
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = params["embed"][tokens]
+        positions = jnp.arange(x.shape[1])[None, :]
+        fn = self._remat(
+            lambda p, xx: constrain(
+                self._dec_block_full(p, xx, enc_out, positions), ("batch", None, None)
+            )
+        )
+
+        def body(xx, p):
+            return fn(p, xx), None
+
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        x = apply_norm(self.cfg, params["final_norm"], x)
+        return chunked_xent(x, params["unembed"], labels)
+
+    # --- serving -----------------------------------------------------------------
+    def prefill(self, params, batch, cache_len: int):
+        """Encode audio + run decoder prefix; build decode caches."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frame_embeds"])
+        tokens = batch["tokens"]
+        x = params["embed"][tokens]
+        b, s, d = x.shape
+        positions = jnp.arange(s)[None, :]
+
+        def pre_block(p, xx):
+            xn = apply_norm(cfg, p["ln1"], xx)
+            q, k, v = _proj_qkv(cfg, p["self_attn"], xn, xn, positions, positions)
+            a = attn_mod.attend(q, k, v, causal=True, impl=cfg.attn_impl,
+                                chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k)
+            xx = xx + jnp.einsum("bse,ed->bsd", a.reshape(b, s, -1), p["self_attn"]["wo"])
+            xn = apply_norm(cfg, p["ln_x"], xx)
+            qc, kc, vc = _proj_qkv(cfg, p["cross_attn"], xn, enc_out)
+            a = attn_mod.attend_bidir(qc, kc, vc, chunk_k=cfg.attn_chunk_k)
+            xx = xx + jnp.einsum("bse,ed->bsd", a.reshape(b, s, -1), p["cross_attn"]["wo"])
+            xx = xx + mlp_fwd(p["mlp"], apply_norm(cfg, p["ln2"], xx), style="gelu2")
+            if s >= cache_len:
+                kr, vr = k[:, -cache_len:], v[:, -cache_len:]
+            else:
+                pad = cache_len - s
+                kr = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vr = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return xx, {"k": kr, "v": vr, "xk": kc, "xv": vc}
+
+        fn = self._remat(pre_block)
+
+        def body(xx, p):
+            return fn(p, xx)
+
+        x, cache = jax.lax.scan(body, x, params["dec"])
+        x = apply_norm(cfg, params["final_norm"], x[:, -1:, :])
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        b = x.shape[0]
+
+        def block(xx, pc):
+            p, c = pc
+            xn = apply_norm(cfg, p["ln1"], xx)
+            positions = jnp.full((b, 1), pos, jnp.int32)
+            q, k, v = _proj_qkv(cfg, p["self_attn"], xn, xn, positions, positions)
+            w = c["k"].shape[1]
+            k_all = jnp.concatenate([c["k"], k], axis=1)
+            v_all = jnp.concatenate([c["v"], v], axis=1)
+            a = attn_mod.decode_attend(q, k_all, v_all, jnp.minimum(pos, w), tail_valid=1)
+            xx = xx + jnp.einsum("bse,ed->bsd", a.reshape(b, 1, -1), p["self_attn"]["wo"])
+            xn = apply_norm(cfg, p["ln_x"], xx)
+            qc = jnp.einsum("bsd,de->bse", xn, p["cross_attn"]["wq"]).reshape(
+                b, 1, cfg.n_heads, cfg.hd
+            )
+            a = attn_mod.decode_attend(qc, c["xk"], c["xv"], c["xk"].shape[1])
+            xx = xx + jnp.einsum("bse,ed->bsd", a.reshape(b, 1, -1), p["cross_attn"]["wo"])
+            xx = xx + mlp_fwd(p["mlp"], apply_norm(cfg, p["ln2"], xx), style="gelu2")
+            slot = jnp.mod(pos, w)
+            new_k = jax.lax.dynamic_update_slice(c["k"], k, (0, slot, 0, 0))
+            new_v = jax.lax.dynamic_update_slice(c["v"], v, (0, slot, 0, 0))
+            return xx, {"k": new_k, "v": new_v, "xk": c["xk"], "xv": c["xv"]}
+
+        x, new_cache = jax.lax.scan(block, x, (params["dec"], cache))
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+        return logits, new_cache
+
+    def cache_specs(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        L = cfg.n_layers
+        F = cfg.enc_dec.enc_seq
+        return {
+            "k": ParamSpec((L, batch, cache_len, cfg.n_kv_heads, cfg.hd),
+                           ("layers", "batch", "kv_seq", "kv_heads", "head_dim"), jnp.bfloat16, "zeros"),
+            "v": ParamSpec((L, batch, cache_len, cfg.n_kv_heads, cfg.hd),
+                           ("layers", "batch", "kv_seq", "kv_heads", "head_dim"), jnp.bfloat16, "zeros"),
+            "xk": ParamSpec((L, batch, F, cfg.n_kv_heads, cfg.hd),
+                            ("layers", "batch", None, "kv_heads", "head_dim"), jnp.bfloat16, "zeros"),
+            "xv": ParamSpec((L, batch, F, cfg.n_kv_heads, cfg.hd),
+                            ("layers", "batch", None, "kv_heads", "head_dim"), jnp.bfloat16, "zeros"),
+        }

@@ -1,0 +1,497 @@
+"""Decoder-only LM assembly (dense / moe / hybrid / rwkv / vlm families).
+
+Layers are organized into **groups**: contiguous runs of identical blocks,
+each group executed as one ``lax.scan`` over stacked parameters (keeps the
+512-way SPMD HLO small and compile times bounded).  Hybrid archs (hymba)
+with a few full-attention layers between sliding-window runs become multiple
+groups; homogeneous archs are a single group.
+
+Three entry points per model (built by :func:`build_lm`):
+  * ``train_loss(params, batch)``            — full fwd + xent loss
+  * ``prefill(params, batch)``               — fwd returning decode caches
+  * ``decode_step(params, cache, tok, pos)`` — one token, cache update
+
+Decode caches are ring buffers of capacity ``cache_len`` (= the shape's
+seq_len for full attention, the window size for SWA, constant-size states
+for SSM/RWKV).  The current token's k/v is appended logically during the
+attention, then written at ``pos % W``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..parallel.axes import constrain
+from . import attention as attn_mod
+from . import ffn as ffn_mod
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .common import ParamSpec, apply_norm, apply_rope, dense_spec, norm_spec, stack_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupDef:
+    kind: str                 # 'dense' | 'moe' | 'hymba' | 'rwkv'
+    n_layers: int
+    window: Optional[int]     # sliding window (None = full attention)
+
+
+def layer_groups(cfg: ArchConfig) -> List[GroupDef]:
+    if cfg.rwkv is not None:
+        return [GroupDef("rwkv", cfg.n_layers, None)]
+    kind = "hymba" if cfg.ssm is not None else ("moe" if cfg.moe is not None else "dense")
+    if cfg.sliding_window is None or not cfg.full_attn_layers:
+        return [GroupDef(kind, cfg.n_layers, cfg.sliding_window)]
+    groups: List[GroupDef] = []
+    full = sorted(set(cfg.full_attn_layers))
+    prev = 0
+    for fi in full:
+        if fi > prev:
+            groups.append(GroupDef(kind, fi - prev, cfg.sliding_window))
+        groups.append(GroupDef(kind, 1, None))
+        prev = fi + 1
+    if prev < cfg.n_layers:
+        groups.append(GroupDef(kind, cfg.n_layers - prev, cfg.sliding_window))
+    return groups
+
+
+# --- per-block specs ----------------------------------------------------------
+
+def attn_spec(cfg: ArchConfig) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.hd
+    spec = {
+        "wq": dense_spec(d, cfg.n_heads * hd, ("embed", "heads")),
+        "wk": dense_spec(d, cfg.n_kv_heads * hd, ("embed", "kv_heads")),
+        "wv": dense_spec(d, cfg.n_kv_heads * hd, ("embed", "kv_heads")),
+        "wo": dense_spec(cfg.n_heads * hd, d, ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ParamSpec((cfg.n_heads * hd,), ("heads",), jnp.bfloat16, "zeros")
+        spec["bk"] = ParamSpec((cfg.n_kv_heads * hd,), ("kv_heads",), jnp.bfloat16, "zeros")
+        spec["bv"] = ParamSpec((cfg.n_kv_heads * hd,), ("kv_heads",), jnp.bfloat16, "zeros")
+    return spec
+
+
+def block_spec(cfg: ArchConfig, kind: str) -> Dict[str, Any]:
+    d = cfg.d_model
+    if kind == "rwkv":
+        r = cfg.rwkv
+        s = rwkv_mod.rwkv_spec(d, cfg.d_ff, r.n_heads, r.head_dim, r.decay_lora)
+        return {"ln1": norm_spec(cfg, d), "time": s["time"], "ln2": norm_spec(cfg, d), "channel": s["channel"]}
+    spec: Dict[str, Any] = {"ln1": norm_spec(cfg, d), "attn": attn_spec(cfg), "ln2": norm_spec(cfg, d)}
+    if kind == "moe":
+        spec["moe"] = ffn_mod.moe_spec(d, cfg.d_ff, cfg.moe.n_experts)
+    else:
+        spec["mlp"] = ffn_mod.mlp_spec(d, cfg.d_ff, style=cfg.mlp_style)
+    if kind == "hymba":
+        s = cfg.ssm
+        spec["ssm"] = ssm_mod.ssm_spec(d, s.n_heads, s.head_dim, s.state_dim, s.conv_width)
+        spec["attn_branch_norm"] = norm_spec(cfg, d)
+        spec["ssm_branch_norm"] = norm_spec(cfg, d)
+    return spec
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed")),
+        "final_norm": norm_spec(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = dense_spec(d, cfg.vocab, ("embed", "vocab"))
+    specs["groups"] = [
+        stack_specs(block_spec(cfg, g.kind), g.n_layers) for g in layer_groups(cfg)
+    ]
+    return specs
+
+
+# --- attention plumbing ----------------------------------------------------------
+
+def _qkv(cfg: ArchConfig, p: Dict[str, Any], x: jax.Array, positions: jax.Array):
+    b, s, d = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_full(cfg: ArchConfig, p, x, positions, window):
+    q, k, v = _qkv(cfg, p, x, positions)
+    out = attn_mod.attend(
+        q, k, v, causal=True, window=window, impl=cfg.attn_impl,
+        chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k,
+        logit_softcap=cfg.attn_softcap,
+    )
+    b, s, _, _ = q.shape
+    return jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), p["wo"])
+
+
+def _attn_prefill(cfg: ArchConfig, p, x, positions, window, cache_len):
+    q, k, v = _qkv(cfg, p, x, positions)
+    out = attn_mod.attend(
+        q, k, v, causal=True, window=window, impl=cfg.attn_impl,
+        chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k,
+        logit_softcap=cfg.attn_softcap,
+    )
+    b, s, _, _ = q.shape
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), p["wo"])
+    # build ring cache of capacity cache_len from the last cache_len tokens
+    if s >= cache_len:
+        kc, vc = k[:, -cache_len:], v[:, -cache_len:]
+    else:
+        pad = cache_len - s
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return y, {"k": kc, "v": vc}
+
+
+def _attn_decode(cfg: ArchConfig, p, x, cache, pos, window):
+    """x: (B,1,d); cache k/v: (B,W,Kh,hd); pos: scalar absolute position."""
+    b = x.shape[0]
+    hd = cfg.hd
+    w = cache["k"].shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(cfg, p, x, positions)
+    # attend over cache ∪ current token
+    k_all = jnp.concatenate([cache["k"], k], axis=1)
+    v_all = jnp.concatenate([cache["v"], v], axis=1)
+    # per-slot validity: slot i (if occupied) holds absolute position
+    # q_i = pos-1 - ((pos-1-i) mod W); the sliding window additionally drops
+    # slots with pos - q_i >= window (e.g. the slot about to be overwritten:
+    # a full ring holds W *previous* tokens, but the window allows only W-1
+    # previous + self)
+    idx = jnp.arange(w)
+    occupied = idx < jnp.minimum(pos, w)
+    valid = occupied
+    if window is not None:
+        slot_pos = pos - 1 - jnp.mod(pos - 1 - idx, w)
+        valid = occupied & (pos - slot_pos < window)
+    valid = jnp.concatenate([valid, jnp.zeros((1,), bool)])  # self via tail_valid
+    out = attn_mod.decode_attend(
+        q, k_all, v_all, jnp.minimum(pos, w), tail_valid=1,
+        valid_mask=valid, logit_softcap=cfg.attn_softcap,
+    )
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, 1, -1), p["wo"])
+    slot = jnp.mod(pos, w)
+    new_k = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    return y, {"k": new_k, "v": new_v}
+
+
+# --- block forward functions ---------------------------------------------------
+
+def make_block_fns(cfg: ArchConfig, g: GroupDef, cache_len: int):
+    """Returns (fwd, prefill, decode) closures for one group's block."""
+    kind, window = g.kind, g.window
+
+    def _ffn(p, x):
+        if kind == "moe":
+            m = cfg.moe
+            return ffn_mod.moe_fwd(
+                p["moe"], x, n_experts=m.n_experts, top_k=m.top_k,
+                capacity_factor=m.capacity_factor, group_size=m.group_size,
+            )
+        return ffn_mod.mlp_fwd(p["mlp"], x, style=cfg.mlp_style)
+
+    def _mixer_full(p, x, positions):
+        if kind == "hymba":
+            s = cfg.ssm
+            a = _attn_full(cfg, p["attn"], x, positions, window)
+            m = ssm_mod.ssm_fwd(p["ssm"], x, s.n_heads, s.head_dim, s.state_dim,
+                                impl=cfg.mixer_impl)
+            a = apply_norm(cfg, p["attn_branch_norm"], a)
+            m = apply_norm(cfg, p["ssm_branch_norm"], m)
+            return 0.5 * (a + m)
+        return _attn_full(cfg, p["attn"], x, positions, window)
+
+    def fwd(p, x, positions):
+        if kind == "rwkv":
+            r = cfg.rwkv
+            st = rwkv_mod.init_state(x.shape[0], cfg.d_model, r.n_heads, r.head_dim, x.dtype)
+            y, _, _ = rwkv_mod.time_mix(p["time"], apply_norm(cfg, p["ln1"], x), st,
+                                        r.n_heads, r.head_dim, impl=cfg.mixer_impl)
+            x = x + y
+            y, _ = rwkv_mod.channel_mix(p["channel"], apply_norm(cfg, p["ln2"], x), st["ffn_x"])
+            return x + y
+        x = x + _mixer_full(p, apply_norm(cfg, p["ln1"], x), positions)
+        return x + _ffn(p, apply_norm(cfg, p["ln2"], x))
+
+    def prefill(p, x, positions):
+        if kind == "rwkv":
+            r = cfg.rwkv
+            b = x.shape[0]
+            st = rwkv_mod.init_state(b, cfg.d_model, r.n_heads, r.head_dim, x.dtype)
+            xn = apply_norm(cfg, p["ln1"], x)
+            y, att_x, wkv = rwkv_mod.time_mix(p["time"], xn, st, r.n_heads, r.head_dim,
+                                              impl=cfg.mixer_impl)
+            x = x + y
+            xn2 = apply_norm(cfg, p["ln2"], x)
+            y, ffn_x = rwkv_mod.channel_mix(p["channel"], xn2, st["ffn_x"])
+            return x + y, {"att_x": xn[:, -1, :], "ffn_x": xn2[:, -1, :], "wkv": wkv}
+        cache = {}
+        xn = apply_norm(cfg, p["ln1"], x)
+        if kind == "hymba":
+            s = cfg.ssm
+            a, kv = _attn_prefill(cfg, p["attn"], xn, positions, window, cache_len)
+            m, ssm_st = ssm_mod.ssm_scan(p["ssm"], xn, None, s.n_heads, s.head_dim,
+                                         s.state_dim, impl=cfg.mixer_impl)
+            mixed = 0.5 * (
+                apply_norm(cfg, p["attn_branch_norm"], a)
+                + apply_norm(cfg, p["ssm_branch_norm"], m)
+            )
+            x = x + mixed
+            cache = {**kv, **ssm_st}
+        else:
+            a, kv = _attn_prefill(cfg, p["attn"], xn, positions, window, cache_len)
+            x = x + a
+            cache = kv
+        x = x + _ffn(p, apply_norm(cfg, p["ln2"], x))
+        return x, cache
+
+    def decode(p, x, cache, pos):
+        if kind == "rwkv":
+            r = cfg.rwkv
+            xn = apply_norm(cfg, p["ln1"], x)
+            y, att_x, wkv = rwkv_mod.time_mix(
+                p["time"], xn, {"att_x": cache["att_x"], "wkv": cache["wkv"]}, r.n_heads, r.head_dim
+            )
+            x = x + y
+            xn2 = apply_norm(cfg, p["ln2"], x)
+            y, ffn_x = rwkv_mod.channel_mix(p["channel"], xn2, cache["ffn_x"])
+            return x + y, {"att_x": xn[:, -1, :], "ffn_x": xn2[:, -1, :], "wkv": wkv}
+        xn = apply_norm(cfg, p["ln1"], x)
+        if kind == "hymba":
+            s = cfg.ssm
+            a, kv = _attn_decode(cfg, p["attn"], xn, {"k": cache["k"], "v": cache["v"]}, pos, window)
+            m, ssm_st = ssm_mod.ssm_step(
+                p["ssm"], xn, {"conv": cache["conv"], "ssm": cache["ssm"]},
+                s.n_heads, s.head_dim, s.state_dim,
+            )
+            mixed = 0.5 * (
+                apply_norm(cfg, p["attn_branch_norm"], a)
+                + apply_norm(cfg, p["ssm_branch_norm"], m)
+            )
+            x = x + mixed
+            new_cache = {**kv, **ssm_st}
+        else:
+            a, kv = _attn_decode(cfg, p["attn"], xn, cache, pos, window)
+            x = x + a
+            new_cache = kv
+        x = x + _ffn(p, apply_norm(cfg, p["ln2"], x))
+        return x, new_cache
+
+    return fwd, prefill, decode
+
+
+# --- cache specs ------------------------------------------------------------------
+
+def group_cache_spec(cfg: ArchConfig, g: GroupDef, batch: int, cache_len: int) -> Dict[str, ParamSpec]:
+    """Stacked (over layers) decode-cache ShapeDtypeStructs + logical axes."""
+    L = g.n_layers
+    if g.kind == "rwkv":
+        r = cfg.rwkv
+        return {
+            "att_x": ParamSpec((L, batch, cfg.d_model), ("layers", "batch", "embed"), jnp.bfloat16, "zeros"),
+            "ffn_x": ParamSpec((L, batch, cfg.d_model), ("layers", "batch", "embed"), jnp.bfloat16, "zeros"),
+            "wkv": ParamSpec((L, batch, r.n_heads, r.head_dim, r.head_dim),
+                             ("layers", "batch", "heads", None, None), jnp.float32, "zeros"),
+        }
+    w = cache_len if g.window is None else min(g.window, cache_len)
+    spec = {
+        "k": ParamSpec((L, batch, w, cfg.n_kv_heads, cfg.hd),
+                       ("layers", "batch", "kv_seq", "kv_heads", "head_dim"), jnp.bfloat16, "zeros"),
+        "v": ParamSpec((L, batch, w, cfg.n_kv_heads, cfg.hd),
+                       ("layers", "batch", "kv_seq", "kv_heads", "head_dim"), jnp.bfloat16, "zeros"),
+    }
+    if g.kind == "hymba":
+        s = cfg.ssm
+        di = s.n_heads * s.head_dim
+        spec["conv"] = ParamSpec((L, batch, s.conv_width - 1, di),
+                                 ("layers", "batch", None, "heads"), jnp.bfloat16, "zeros")
+        spec["ssm"] = ParamSpec((L, batch, s.n_heads, s.head_dim, s.state_dim),
+                                ("layers", "batch", "heads", "head_dim", None), jnp.float32, "zeros")
+    return spec
+
+
+def cache_specs(cfg: ArchConfig, batch: int, cache_len: int) -> List[Dict[str, ParamSpec]]:
+    return [group_cache_spec(cfg, g, batch, cache_len) for g in layer_groups(cfg)]
+
+
+# --- model assembly --------------------------------------------------------------
+
+def _xent(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    """One-hot-einsum cross entropy: every reduction over the (sharded) vocab
+    dim lowers to a clean psum; no gather on a sharded dim."""
+    lg = logits.astype(jnp.float32)
+    lg = constrain(lg, ("batch", None, "vocab"))
+    m = jax.lax.stop_gradient(lg.max(axis=-1, keepdims=True))
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1))
+    onehot = jax.nn.one_hot(labels, lg.shape[-1], dtype=lg.dtype)
+    lab = jnp.einsum("...v,...v->...", lg, onehot)
+    nll = lse - lab
+    if mask is not None:
+        return (nll * mask).sum(), mask.sum()
+    return nll.sum(), jnp.asarray(nll.size, jnp.float32)
+
+
+def chunked_xent(
+    x: jax.Array,
+    unembed_w: jax.Array,
+    labels: jax.Array,
+    mask: Optional[jax.Array] = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Sequence-chunked unembed+xent: the (B, S, V) logits tensor is never
+    materialized — per-chunk logits are (B, c, V) and rematerialized in the
+    backward pass (jax.checkpoint), bounding the loss-path working set."""
+    b, s, d = x.shape
+    if s % chunk != 0 or s <= chunk:
+        logits = constrain(jnp.einsum("bsd,dv->bsv", x, unembed_w), ("batch", None, "vocab"))
+        total, count = _xent(logits, labels, mask)
+        return total / jnp.maximum(count, 1.0)
+    n = s // chunk
+
+    def body(carry, inp):
+        total, count = carry
+        x_c, lab_c, m_c = inp
+        logits = constrain(jnp.einsum("bsd,dv->bsv", x_c, unembed_w), ("batch", None, "vocab"))
+        t, c = _xent(logits, lab_c, m_c)
+        return (total + t, count + c), None
+
+    xs = x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    labs = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+    ms = (
+        mask.reshape(b, n, chunk).transpose(1, 0, 2)
+        if mask is not None
+        else jnp.ones((n, b, chunk), jnp.float32)
+    )
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (total, count), _ = jax.lax.scan(fn, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xs, labs, ms))
+    return total / jnp.maximum(count, 1.0)
+
+
+class LM:
+    """Functional decoder-only LM bound to an ArchConfig."""
+
+    def __init__(self, cfg: ArchConfig, remat_policy: str = "none"):
+        self.cfg = cfg
+        self.groups = layer_groups(cfg)
+        self.remat_policy = remat_policy
+
+    # - specs -
+    def param_specs(self) -> Dict[str, Any]:
+        return param_specs(self.cfg)
+
+    def cache_specs(self, batch: int, cache_len: int):
+        return cache_specs(self.cfg, batch, cache_len)
+
+    # - helpers -
+    def _embed(self, params, tokens):
+        return constrain(params["embed"][tokens], ("batch", None, None))
+
+    def _unembed_w(self, params):
+        return params["embed"].T if self.cfg.tie_embeddings else params["unembed"]
+
+    def _unembed(self, params, x):
+        x = apply_norm(self.cfg, params["final_norm"], x)
+        return constrain(
+            jnp.einsum("bsd,dv->bsv", x, self._unembed_w(params)), ("batch", None, "vocab")
+        )
+
+    def _remat(self, fn):
+        if self.remat_policy == "none":
+            return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+        if self.remat_policy == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+            )
+        if self.remat_policy == "full":  # no rematerialization
+            return fn
+        raise ValueError(self.remat_policy)
+
+    def _run_groups(self, params, x, positions):
+        for g, p_stacked in zip(self.groups, params["groups"]):
+            fwd, _, _ = make_block_fns(self.cfg, g, cache_len=0)
+            fn = self._remat(
+                lambda p, xx: constrain(fwd(p, xx, positions), ("batch", None, None))
+            )
+
+            def body(xx, p):
+                return fn(p, xx), None
+
+            x, _ = jax.lax.scan(body, x, p_stacked)
+        return x
+
+    # - entry points -
+    def train_loss(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        mask = None
+        if cfg.vlm is not None:
+            ve = batch["vision_embeds"].astype(x.dtype)
+            x = jnp.concatenate([ve, x], axis=1)
+            mask = jnp.concatenate(
+                [jnp.zeros(ve.shape[:2], jnp.float32), jnp.ones(tokens.shape, jnp.float32)],
+                axis=1,
+            )
+        positions = jnp.arange(x.shape[1])[None, :]
+        x = self._run_groups(params, x, positions)
+        x = apply_norm(cfg, params["final_norm"], x)
+        labels = batch["labels"]
+        if cfg.vlm is not None:
+            pad = jnp.zeros((labels.shape[0], x.shape[1] - labels.shape[1]), labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        return chunked_xent(x, self._unembed_w(params), labels, mask)
+
+    def prefill(self, params, batch, cache_len: int):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        if cfg.vlm is not None:
+            x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype), x], axis=1)
+        positions = jnp.arange(x.shape[1])[None, :]
+        caches = []
+        for g, p_stacked in zip(self.groups, params["groups"]):
+            _, prefill_fn, _ = make_block_fns(self.cfg, g, cache_len)
+            fn = self._remat(lambda p, xx: prefill_fn(p, xx, positions))
+
+            def body(xx, p):
+                y, c = fn(p, xx)
+                return y, c
+
+            x, cache = jax.lax.scan(body, x, p_stacked)
+            caches.append(cache)
+        logits = self._unembed(params, x[:, -1:, :])
+        return logits, caches
+
+    def decode_step(self, params, caches, tokens, pos):
+        """tokens: (B, 1); pos: scalar int32 absolute position."""
+        x = self._embed(params, tokens)
+        new_caches = []
+        for g, p_stacked, cache in zip(self.groups, params["groups"], caches):
+            _, _, decode_fn = make_block_fns(self.cfg, g, cache_len=0)
+
+            def body(xx, pc):
+                p, c = pc
+                y, c2 = decode_fn(p, xx, c, pos)
+                return y, c2
+
+            x, new_cache = jax.lax.scan(body, x, (p_stacked, cache))
+            new_caches.append(new_cache)
+        logits = self._unembed(params, x)
+        return logits, new_caches

@@ -1,0 +1,199 @@
+"""RWKV6 ("Finch") block: token-shift time-mix with data-dependent decay
+(wkv6 recurrence) + gated channel-mix.  Attention-free; decode state is
+constant-size: two token-shift vectors + one (H, hd, hd) wkv state per layer.
+
+wkv6 per head (hd = head dim, keys and values same width):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          # (hd, hd) state
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+``w_t = exp(-exp(w0 + lora(x_t)))`` — per-channel, data-dependent decay (the
+Finch contribution vs RWKV5's static decay).  This module is the pure-JAX
+scan (oracle for `kernels/rwkv6.py`, which implements the chunked form).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, dense_spec
+
+
+def rwkv_spec(d: int, f: int, n_heads: int, head_dim: int, lora: int) -> Dict[str, ParamSpec]:
+    di = n_heads * head_dim
+    return {
+        "time": {
+            # token-shift interpolation coefficients for r,k,v,g,w
+            "mu_r": ParamSpec((d,), (None,), jnp.float32, "ones", 0.5),
+            "mu_k": ParamSpec((d,), (None,), jnp.float32, "ones", 0.5),
+            "mu_v": ParamSpec((d,), (None,), jnp.float32, "ones", 0.5),
+            "mu_g": ParamSpec((d,), (None,), jnp.float32, "ones", 0.5),
+            "mu_w": ParamSpec((d,), (None,), jnp.float32, "ones", 0.5),
+            "w_r": dense_spec(d, di, ("embed", "heads")),
+            "w_k": dense_spec(d, di, ("embed", "heads")),
+            "w_v": dense_spec(d, di, ("embed", "heads")),
+            "w_g": dense_spec(d, di, ("embed", "heads")),
+            "w_o": dense_spec(di, d, ("heads", "embed")),
+            # data-dependent decay: w0 + tanh(x A1) A2
+            "w0": ParamSpec((di,), (None,), jnp.float32, "decay"),
+            "w_lora_a": dense_spec(d, lora, ("embed", None), jnp.float32),
+            "w_lora_b": dense_spec(lora, di, (None, "heads"), jnp.float32),
+            "u": ParamSpec((n_heads, head_dim), (None, None), jnp.float32, "normal", 1.0),
+            "ln_scale": ParamSpec((di,), (None,), jnp.float32, "ones"),
+            "ln_bias": ParamSpec((di,), (None,), jnp.float32, "zeros"),
+        },
+        "channel": {
+            "mu_k": ParamSpec((d,), (None,), jnp.float32, "ones", 0.5),
+            "mu_r": ParamSpec((d,), (None,), jnp.float32, "ones", 0.5),
+            "w_k": dense_spec(d, f, ("embed", "mlp")),
+            "w_v": dense_spec(f, d, ("mlp", "embed")),
+            "w_r": dense_spec(d, d, ("embed", "embed2")),
+        },
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x: (B, S, d); prev: (B, d) last token of previous chunk.  Returns
+    x shifted right by one along S with ``prev`` filling slot 0."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix(x: jax.Array, x_prev: jax.Array, mu: jax.Array) -> jax.Array:
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def _group_norm(y: jax.Array, scale: jax.Array, bias: jax.Array, n_heads: int) -> jax.Array:
+    b, s, di = y.shape
+    yh = y.reshape(b, s, n_heads, di // n_heads).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = ((yh - mu) ** 2).mean(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    return (yh.reshape(b, s, di) * scale + bias).astype(y.dtype)
+
+
+def time_mix(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    st: Dict[str, jax.Array],
+    n_heads: int,
+    head_dim: int,
+    impl: str = "scan",
+    chunk: int = 16,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (y, new_shift (B,d), new_wkv (B,H,hd,hd)).
+
+    ``impl='chunked'`` uses the block form (kernels/rwkv6.py math in
+    differentiable jnp) — per-chunk matmuls instead of a length-S scan."""
+    b, s, d = x.shape
+    di = n_heads * head_dim
+    prev = st["att_x"]
+    xs = _token_shift(x, prev)
+    r = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mu_r"]), p["w_r"])
+    k = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mu_k"]), p["w_k"])
+    v = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mu_v"]), p["w_v"])
+    g = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mu_g"]), p["w_g"])
+    xw = _mix(x, xs, p["mu_w"]).astype(jnp.float32)
+    lora = jnp.einsum(
+        "bsl,le->bse", jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["w_lora_a"])), p["w_lora_b"]
+    )
+    w = jnp.exp(-jnp.exp(p["w0"][None, None, :] + lora))     # (B,S,di) in (0,1)
+
+    rh = r.reshape(b, s, n_heads, head_dim).astype(jnp.float32)
+    kh = k.reshape(b, s, n_heads, head_dim).astype(jnp.float32)
+    vh = v.reshape(b, s, n_heads, head_dim).astype(jnp.float32)
+    wh = w.reshape(b, s, n_heads, head_dim)
+    u = p["u"]                                                # (H, hd)
+
+    if impl == "chunked" and s > 1 and s % chunk == 0:
+        y, S_final = _chunked_wkv(rh, kh, vh, wh, u, st["wkv"].astype(jnp.float32), chunk)
+        y = y.reshape(b, s, di)
+        y = _group_norm(y, p["ln_scale"], p["ln_bias"], n_heads)
+        y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+        out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["w_o"])
+        return out, x[:, -1, :], S_final
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                              # (B,H,hd) each
+        kv = k_t[..., None] * v_t[..., None, :]               # (B,H,hd,hd)
+        y_t = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y_t
+
+    S0 = st["wkv"]
+    inputs = (
+        rh.transpose(1, 0, 2, 3),
+        kh.transpose(1, 0, 2, 3),
+        vh.transpose(1, 0, 2, 3),
+        wh.transpose(1, 0, 2, 3),
+    )
+    # checkpoint: scan-AD would otherwise save every step's (hd, hd) kv outer
+    # product; with checkpoint only the carried wkv state is saved per step
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    S_final, ys = jax.lax.scan(step, S0, inputs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    y = _group_norm(y, p["ln_scale"], p["ln_bias"], n_heads)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["w_o"])
+    return out, x[:, -1, :], S_final
+
+
+def _chunked_wkv(rh, kh, vh, wh, u, S0, chunk):
+    """Block-form wkv6 (see kernels/rwkv6.py for the math & stability note).
+    rh/kh/wh (B,S,H,K) f32, vh (B,S,H,V) f32, u (H,K), S0 (B,H,K,V)."""
+    b, s, h, kd = rh.shape
+    vd = vh.shape[-1]
+    nc = s // chunk
+    shape5 = (b, nc, chunk, h, kd)
+    rc = rh.reshape(shape5)
+    kc = kh.reshape(shape5)
+    vc = vh.reshape(b, nc, chunk, h, vd)
+    lwc = jnp.log(jnp.maximum(wh, 1e-30)).reshape(shape5)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def chunk_step(S, inp):
+        r, k, v, lw_raw = inp                   # (B,C,H,K)... (B,C,H,V)
+        lw = jnp.cumsum(lw_raw, axis=1)
+        lw_excl = lw - lw_raw
+        rd = r * jnp.exp(lw_excl)
+        y_state = jnp.einsum("bchk,bhkv->bchv", rd, S)
+        rel = lw_excl[:, :, None] - lw[:, None, :, :]          # (B,t,s,H,K)
+        decay = jnp.where(tri[None, :, :, None, None], jnp.exp(rel), 0.0)
+        a = jnp.einsum("bthk,bshk,btshk->btsh", r, k, decay)
+        a_diag = jnp.einsum("bchk,hk,bchk->bch", r, u, k)
+        eye = jnp.eye(chunk, dtype=bool)
+        a = a + jnp.where(eye[None, :, :, None], a_diag[:, :, None, :], 0.0)
+        y_intra = jnp.einsum("btsh,bshv->bthv", a, v)
+        lw_last = lw[:, -1:]                                    # (B,1,H,K)
+        k_scaled = k * jnp.exp(lw_last - lw)
+        S_new = jnp.exp(lw_last[:, 0])[..., None] * S + jnp.einsum(
+            "bchk,bchv->bhkv", k_scaled, v
+        )
+        return S_new, y_state + y_intra
+
+    inputs = tuple(t.transpose(1, 0, 2, 3, 4) for t in (rc, kc, vc, lwc))
+    S_final, ys = jax.lax.scan(chunk_step, S0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, vd)
+    return y.reshape(b, s, h * vd), S_final
+
+
+def channel_mix(
+    p: Dict[str, jax.Array], x: jax.Array, prev: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    xs = _token_shift(x, prev)
+    k = jnp.einsum("bsd,df->bsf", _mix(x, xs, p["mu_k"]), p["w_k"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", _mix(x, xs, p["mu_r"]), p["w_r"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    return r * jnp.einsum("bsf,fd->bsd", k, p["w_v"]), x[:, -1, :]
+
+
+def init_state(b: int, d: int, n_heads: int, head_dim: int, dtype):
+    return {
+        "att_x": jnp.zeros((b, d), dtype),
+        "ffn_x": jnp.zeros((b, d), dtype),
+        "wkv": jnp.zeros((b, n_heads, head_dim, head_dim), jnp.float32),
+    }

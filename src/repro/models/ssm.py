@@ -1,0 +1,196 @@
+"""Mamba-style selective SSM branch (hymba's parallel-head hybrid).
+
+Mamba2-flavoured head-structured selective scan:
+
+    h_t = exp(-exp(A_log) * dt_t) * h_{t-1} + dt_t * (x_t ⊗ B_t)
+    y_t = (h_t · C_t) + D * x_t
+
+with per-head scalar decay ``A_log``, data-dependent ``dt_t`` (softplus),
+shared B/C projections (single group), causal depthwise conv on the input
+path, and a SiLU gate branch — the standard mamba2 block minus the
+hardware-specific chunking (the Pallas kernel `kernels/ssm_scan.py` provides
+a chunked TPU implementation; this module is the pure-JAX path / oracle).
+
+State for decode: conv tail (B, cw-1, di) + ssm state (B, H, hd, N).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, dense_spec
+
+
+def ssm_spec(d: int, n_heads: int, head_dim: int, state: int, conv_width: int) -> Dict[str, ParamSpec]:
+    di = n_heads * head_dim
+    return {
+        "in_proj": dense_spec(d, di, ("embed", "heads")),
+        "gate_proj": dense_spec(d, di, ("embed", "heads")),
+        "conv_w": ParamSpec((conv_width, di), (None, "heads"), jnp.bfloat16, "normal", 0.5),
+        "dt_proj": dense_spec(d, n_heads, ("embed", None)),
+        "dt_bias": ParamSpec((n_heads,), (None,), jnp.float32, "zeros"),
+        "b_proj": dense_spec(d, state, ("embed", None)),
+        "c_proj": dense_spec(d, state, ("embed", None)),
+        "a_log": ParamSpec((n_heads,), (None,), jnp.float32, "decay"),
+        "d_skip": ParamSpec((n_heads,), (None,), jnp.float32, "ones"),
+        "out_proj": dense_spec(di, d, ("heads", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, tail: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv via shifted adds.  x: (B, S, di); w: (cw, di).
+    ``tail``: (B, cw-1, di) previous context (decode) — returns new tail."""
+    cw = w.shape[0]
+    b, s, di = x.shape
+    if tail is None:
+        tail = jnp.zeros((b, cw - 1, di), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)           # (B, S+cw-1, di)
+    y = jnp.zeros_like(x)
+    for i in range(cw):
+        y = y + xp[:, i : i + s] * w[cw - 1 - i]
+    new_tail = xp[:, -(cw - 1):] if cw > 1 else tail
+    return y, new_tail
+
+
+def ssm_fwd(
+    p: Dict[str, jax.Array], x: jax.Array, n_heads: int, head_dim: int, state: int,
+    impl: str = "scan",
+) -> jax.Array:
+    """Full-sequence forward (train / prefill). x: (B, S, d) -> (B, S, d)."""
+    y, _ = ssm_scan(p, x, None, n_heads, head_dim, state, impl=impl)
+    return y
+
+
+def init_state(b: int, n_heads: int, head_dim: int, state: int, conv_width: int, di: int, dtype):
+    return {
+        "conv": jnp.zeros((b, conv_width - 1, di), dtype),
+        "ssm": jnp.zeros((b, n_heads, head_dim, state), jnp.float32),
+    }
+
+
+def ssm_scan(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    st: Dict[str, jax.Array],
+    n_heads: int,
+    head_dim: int,
+    state: int,
+    impl: str = "scan",
+    chunk: int = 64,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Selective scan over the full input; returns (y, new_state).
+    ``st=None`` starts from zeros (training).
+
+    ``impl='chunked'`` uses the SSD block form (the Pallas kernel's math in
+    differentiable jnp): per-step HBM round-trips become per-chunk matmuls —
+    the optimization recorded in EXPERIMENTS §Perf for the hybrid/ssm cells.
+    """
+    b, s, d = x.shape
+    di = n_heads * head_dim
+    xs = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = jnp.einsum("bsd,de->bse", x, p["gate_proj"])
+    conv_tail = st["conv"] if st is not None else None
+    xs, new_tail = _causal_conv(xs, p["conv_w"], conv_tail)
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["dt_proj"].astype(jnp.float32))
+        + p["dt_bias"]
+    )                                                   # (B, S, H)
+    decay = jnp.exp(-jnp.exp(p["a_log"])[None, None, :] * dt)  # (B, S, H)
+    bt = jnp.einsum("bsd,dn->bsn", x, p["b_proj"]).astype(jnp.float32)
+    ct = jnp.einsum("bsd,dn->bsn", x, p["c_proj"]).astype(jnp.float32)
+    xh = xs.reshape(b, s, n_heads, head_dim).astype(jnp.float32)
+
+    h0 = st["ssm"] if st is not None else jnp.zeros((b, n_heads, head_dim, state), jnp.float32)
+
+    if impl == "chunked" and s > 1 and s % chunk == 0:
+        y, h_final = _chunked_selective_scan(xh, dt, decay, bt, ct, h0, chunk)
+        y = y + p["d_skip"][None, None, :, None] * xh
+        y = y.reshape(b, s, di).astype(x.dtype)
+        y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+        out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+        return out, {"conv": new_tail, "ssm": h_final}
+
+    def step(h, inp):
+        x_t, dt_t, dec_t, b_t, c_t = inp
+        # h: (B, H, hd, N)
+        upd = (dt_t[:, :, None] * x_t)[..., None] * b_t[:, None, None, :]
+        h = dec_t[:, :, None, None] * h + upd
+        y_t = jnp.einsum("bhdn,bn->bhd", h, c_t)
+        return h, y_t
+
+    xs_t = (
+        xh.transpose(1, 0, 2, 3),       # (S, B, H, hd)
+        dt.transpose(1, 0, 2),          # (S, B, H)
+        decay.transpose(1, 0, 2),
+        bt.transpose(1, 0, 2),
+        ct.transpose(1, 0, 2),
+    )
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    h_final, ys = jax.lax.scan(step, h0, xs_t)
+    y = ys.transpose(1, 0, 2, 3)                          # (B, S, H, hd)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_state = {"conv": new_tail, "ssm": h_final}
+    return out, new_state
+
+
+def ssm_step(
+    p: Dict[str, jax.Array],
+    x1: jax.Array,
+    st: Dict[str, jax.Array],
+    n_heads: int,
+    head_dim: int,
+    state: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode step. x1: (B, 1, d)."""
+    return ssm_scan(p, x1, st, n_heads, head_dim, state)
+
+
+def _chunked_selective_scan(xh, dt, decay, bt, ct, h0, chunk):
+    """SSD block form.  xh (B,S,H,P) f32; dt/decay (B,S,H); bt/ct (B,S,N);
+    h0 (B,H,P,N).  Exponents are differences of log-cumsums with later-minus-
+    earlier ordering, so every exp() argument is <= 0 (stable)."""
+    b, s, h, p_dim = xh.shape
+    n = bt.shape[-1]
+    nc = s // chunk
+    u = (dt[..., None] * xh).reshape(b, nc, chunk, h, p_dim)
+    la_all = jnp.log(jnp.maximum(decay, 1e-30)).reshape(b, nc, chunk, h)
+    btc = bt.reshape(b, nc, chunk, n)
+    ctc = ct.reshape(b, nc, chunk, n)
+
+    def chunk_step(h_prev, inp):
+        uc, lac, bc, cc = inp          # (B,C,H,P), (B,C,H), (B,C,N), (B,C,N)
+        la = jnp.cumsum(lac, axis=1)   # (B,C,H)
+        # state contribution
+        cs = jnp.einsum("bcn,bhpn->bchp", cc, h_prev)
+        y_state = jnp.exp(la)[..., None] * cs
+        # intra-chunk
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)               # (B,C,C)
+        rel = la[:, :, None, :] - la[:, None, :, :]           # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        m = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0) * cb[..., None]
+        y_intra = jnp.einsum("btsh,bshp->bthp", m, uc)
+        # state update
+        la_last = la[:, -1:, :]                               # (B,1,H)
+        scaled_u = uc * jnp.exp(la_last - la)[..., None]      # (B,C,H,P)
+        h_new = jnp.exp(la_last[:, 0, :])[:, :, None, None] * h_prev + jnp.einsum(
+            "bchp,bcn->bhpn", scaled_u, bc
+        )
+        return h_new, y_state + y_intra
+
+    inputs = (
+        u.transpose(1, 0, 2, 3, 4),
+        la_all.transpose(1, 0, 2, 3),
+        btc.transpose(1, 0, 2, 3),
+        ctc.transpose(1, 0, 2, 3),
+    )
+    h_final, ys = jax.lax.scan(chunk_step, h0.astype(jnp.float32), inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p_dim)
+    return y, h_final

@@ -1,0 +1,104 @@
+"""Sharded AdamW with global-norm clipping and cosine schedule.
+
+Moments live in a pytree mirroring the params (same logical axes => same
+sharding).  Moment dtype is configurable: fp32 default; bf16 for the
+largest archs (grok-1) where fp32 moments alone would exceed per-device
+HBM on the single-pod mesh (see DESIGN §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    moment_dtype: Any = jnp.float32
+
+
+def opt_state_specs(param_specs, cfg: AdamWConfig):
+    """ParamSpec tree for the optimizer state (dry-run lowering)."""
+    def _m(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, s.logical, cfg.moment_dtype, "zeros")
+
+    is_spec = lambda x: isinstance(x, ParamSpec)
+    return {
+        "mu": jax.tree.map(_m, param_specs, is_leaf=is_spec),
+        "nu": jax.tree.map(_m, param_specs, is_leaf=is_spec),
+        "count": ParamSpec((), (), jnp.int32, "zeros"),
+    }
+
+
+def init(params, cfg: AdamWConfig):
+    z = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "mu": jax.tree.map(z, params),
+        "nu": jax.tree.map(z, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / max(1, cfg.warmup_steps))
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0
+    )
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def update(grads, state, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    lr = schedule(cfg, count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def _upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = cfg.b1 * m32 + (1.0 - cfg.b1) * g
+        v_new = cfg.b2 * v32 + (1.0 - cfg.b2) * g * g
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * step
+        return (
+            p_new.astype(p.dtype),
+            m_new.astype(cfg.moment_dtype),
+            v_new.astype(cfg.moment_dtype),
+        )
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["mu"])
+    flat_v = treedef.flatten_up_to(state["nu"])
+    out = [_upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "mu": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "nu": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "count": count,
+    }
+    return new_params, new_state, {"grad_norm": gn, "lr": lr}

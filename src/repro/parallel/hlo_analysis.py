@@ -1,0 +1,407 @@
+"""HLO cost model: FLOPs / HBM traffic / collective traffic from compiled HLO.
+
+Why not ``compiled.cost_analysis()``?  XLA's HloCostAnalysis counts a
+``while`` body **once**, so any scan-over-layers model (ours) is undercounted
+by ~n_layers; collective parsing has the same problem.  This module parses
+the compiled module text, builds the call graph, and multiplies loop bodies
+by their trip counts (recovered from the integer bound in the loop condition
+— scans lower to ``i < N`` with constant N).
+
+Conventions (documented in EXPERIMENTS §Roofline):
+
+* **FLOPs** — dot/convolution FLOPs only (2·M·N·K), the MFU convention;
+  elementwise/transcendental ops are excluded.
+* **HBM traffic** — per instruction: result bytes + operand bytes, counted at
+  fusion boundaries (fusion internals don't touch HBM); parameters /
+  constants / tuples / GTEs / bitcasts are free.
+* **Collectives** — result bytes × effective-traffic multiplier
+  (all-gather 1.0, all-reduce 2.0, reduce-scatter 1.0, all-to-all 1.0,
+  collective-permute 1.0), per device.
+
+All numbers are **per device** (the module is the per-device SPMD program).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter, defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_COLL_MULT = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[\w\.\-]+)\s*=\s*(?P<rtype>\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>[\w\-]+)\((?P<args>.*?)\)(?P<rest>.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w\.\-]+)\s*\((?P<params>.*)\)\s*->\s*.*\{\s*$")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONST_INT_RE = re.compile(r"=\s*[su]\d+\[\]\s*constant\((\d+)\)")
+
+_NO_TRAFFIC_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "iota", "partition-id", "replica-id",
+}
+
+_SKIP_CALLED = {
+    "reduce", "reduce-window", "scatter", "select-and-scatter", "sort", "map",
+    "all-reduce", "reduce-scatter", "all-reduce-start",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def _type_bytes(t: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(t):
+        total += _shape_elems(dims) * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def _type_dims(t: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(t)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class _Instr:
+    name: str
+    rtype: str
+    op: str
+    args: str
+    rest: str
+
+
+@dataclass
+class _Comp:
+    name: str
+    instrs: List[_Instr] = field(default_factory=list)
+    const_ints: List[int] = field(default_factory=list)
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _parse_module(text: str) -> Tuple[Dict[str, _Comp], Dict[str, str], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    shapes: Dict[str, str] = {}     # instruction/param name -> result type str
+    entry: Optional[str] = None
+    cur: Optional[_Comp] = None
+    for line in text.splitlines():
+        if "/*" in line:
+            line = _COMMENT_RE.sub("", line)
+        if cur is None or (line and not line[0].isspace() and line.rstrip().endswith("{")):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = _Comp(m.group("name"))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                for pname, ptype in _PARAM_RE.findall(m.group("params")):
+                    shapes[pname] = ptype
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            ins = _Instr(mi.group("name"), mi.group("rtype"), mi.group("op"),
+                         mi.group("args"), mi.group("rest"))
+            cur.instrs.append(ins)
+            shapes[ins.name] = ins.rtype
+        mc = _CONST_INT_RE.search(line)
+        if mc:
+            cur.const_ints.append(int(mc.group(1)))
+    return comps, shapes, entry
+
+
+@dataclass
+class HloCost:
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    convert_traffic: float = 0.0          # dtype-convert churn (CPU f32-dot artifact)
+    collective_traffic: float = 0.0
+    collective_traffic_raw: float = 0.0   # without the TPU-dtype correction
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    unknown_trip_whiles: int = 0
+    while_trips: List[int] = field(default_factory=list)
+
+    def merge_scaled(self, other: "HloCost", k: float) -> None:
+        self.dot_flops += other.dot_flops * k
+        self.traffic_bytes += other.traffic_bytes * k
+        self.convert_traffic += other.convert_traffic * k
+        self.collective_traffic += other.collective_traffic * k
+        self.collective_traffic_raw += other.collective_traffic_raw * k
+        for op, st in other.collectives.items():
+            mine = self.collectives.setdefault(
+                op, {"count": 0.0, "bytes": 0.0, "traffic": 0.0, "traffic_raw": 0.0})
+            for f in ("count", "bytes", "traffic", "traffic_raw"):
+                mine[f] += st.get(f, 0.0) * k
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+        self.while_trips.extend(other.while_trips)
+
+
+_ATTR_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_ATTR_TO_APPLY = re.compile(r"to_apply=%?([\w\.\-]+)")
+_ATTR_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_ATTR_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_ATTR_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_ATTR_TRIP = re.compile(r'known_trip_count=\{[^}]*?[":]+(\d+)')
+
+
+def _dot_flops(ins: _Instr, shapes: Dict[str, str]) -> float:
+    out_elems = 0
+    for dtype, dims in _SHAPE_RE.findall(ins.rtype):
+        out_elems += _shape_elems(dims)
+    mk = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+    contract = 1
+    if mk:
+        ops = _OPERAND_RE.findall(ins.args)
+        lhs_type = shapes.get(ops[0]) if ops else None
+        # inline operand types take precedence if present
+        inline = _SHAPE_RE.search(ins.args)
+        dims = _type_dims(lhs_type) if lhs_type else None
+        if dims is None and inline:
+            dims = _type_dims(inline.group(0))
+        if dims is not None and mk.group(1):
+            for idx in mk.group(1).split(","):
+                i = int(idx)
+                if i < len(dims):
+                    contract *= dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _comp_cost(
+    comp: _Comp,
+    comps: Dict[str, _Comp],
+    shapes: Dict[str, str],
+    memo: Dict[str, HloCost],
+    tpu_dtype_correction: bool = True,
+) -> HloCost:
+    if comp.name in memo:
+        return memo[comp.name]
+    memo[comp.name] = HloCost()  # break cycles defensively
+    cost = HloCost()
+    for ins in comp.instrs:
+        op = ins.op
+        # --- flops ---
+        if op == "dot":
+            cost.dot_flops += _dot_flops(ins, shapes)
+        elif op == "convolution":
+            # rough: 2 * out_elems * kernel_elems (no grouped-conv refinement)
+            out_elems = sum(_shape_elems(d) for _, d in _SHAPE_RE.findall(ins.rtype))
+            ops = _OPERAND_RE.findall(ins.args)
+            k_elems = 1
+            if len(ops) > 1 and ops[1] in shapes:
+                dims = _type_dims(shapes[ops[1]]) or []
+                for d in dims[:-1]:
+                    k_elems *= d
+            cost.dot_flops += 2.0 * out_elems * k_elems
+
+        # --- traffic ---
+        if op not in _NO_TRAFFIC_OPS and op not in ("while", "fusion"):
+            refs = _OPERAND_RE.findall(ins.args)
+            if op in ("dynamic-slice", "gather", "slice"):
+                # indexed reads touch only the slice, not the whole operand
+                b = 2 * _type_bytes(ins.rtype)
+            elif op == "dynamic-update-slice":
+                upd = refs[1] if len(refs) > 1 else None
+                ub = _type_bytes(shapes.get(upd, "f32[]")) if upd else 0
+                b = 2 * ub
+            elif op == "scatter":
+                upd = refs[2] if len(refs) > 2 else None
+                ub = _type_bytes(shapes.get(upd, "f32[]")) if upd else 0
+                b = 2 * ub
+            else:
+                b = _type_bytes(ins.rtype)
+                for name in refs:
+                    if name in shapes:
+                        b += _type_bytes(shapes[name])
+            cost.traffic_bytes += b
+            if op == "convert":
+                # bf16<->f32 conversion churn: XLA CPU upcasts every bf16 dot
+                # to f32 (the jaxpr requests bf16 / MXU semantics), inserting
+                # converts that do not exist in the TPU program.  Tracked so
+                # the roofline can report a TPU-corrected memory term.
+                cost.convert_traffic += b
+
+        # --- collectives ---
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLL_MULT:
+            rb = _type_bytes(ins.rtype)
+            if op.endswith("-start"):
+                rb = rb // 2 or rb  # start ops carry (operand, result) tuples
+            # TPU-dtype correction: XLA *CPU* force-upcasts bf16 dots to f32,
+            # so partial-sum all-reduces appear at f32 width even though the
+            # jaxpr requested preferred_element_type=bf16 (MXU semantics).
+            # Count those at bf16 width — metadata ties the AR to its
+            # dot_general.  Raw (uncorrected) bytes are kept separately.
+            rb_corr = rb
+            if (
+                tpu_dtype_correction
+                and "dot_general" in ins.rest
+                and "f32[" in ins.rtype
+                and "bf16[" not in ins.rtype
+            ):
+                rb_corr = rb // 2
+            st = cost.collectives.setdefault(base, {"count": 0.0, "bytes": 0.0, "traffic": 0.0, "traffic_raw": 0.0})
+            st["count"] += 1
+            st["bytes"] += rb_corr
+            st["traffic"] += rb_corr * _COLL_MULT[base]
+            st["traffic_raw"] += rb * _COLL_MULT[base]
+            cost.collective_traffic += rb_corr * _COLL_MULT[base]
+            cost.collective_traffic_raw += rb * _COLL_MULT[base]
+
+        # --- called computations ---
+        if op == "while":
+            body = _ATTR_BODY.search(ins.rest)
+            cond = _ATTR_COND.search(ins.rest)
+            trip_m = _ATTR_TRIP.search(ins.rest)
+            trip = int(trip_m.group(1)) if trip_m else None
+            if trip is None and cond and cond.group(1) in comps:
+                ints = comps[cond.group(1)].const_ints
+                trip = max(ints) if ints else None
+            if trip is None:
+                trip = 1
+                cost.unknown_trip_whiles += 1
+            cost.while_trips.append(trip)
+            for ref in (body, cond):
+                if ref and ref.group(1) in comps:
+                    sub = _comp_cost(comps[ref.group(1)], comps, shapes, memo, tpu_dtype_correction)
+                    cost.merge_scaled(sub, trip)
+        elif op == "fusion":
+            m = _ATTR_CALLS.search(ins.rest)
+            if m and m.group(1) in comps:
+                called = comps[m.group(1)]
+                sub = _comp_cost(called, comps, shapes, memo)
+                # fusions: internal flops count, internal traffic doesn't —
+                # HBM traffic happens at the fusion boundary
+                cost.dot_flops += sub.dot_flops
+                cost.collective_traffic += sub.collective_traffic
+                for opn, st in sub.collectives.items():
+                    mine = cost.collectives.setdefault(opn, {"count": 0.0, "bytes": 0.0, "traffic": 0.0})
+                    for f in ("count", "bytes", "traffic"):
+                        mine[f] += st[f]
+                ft = _fusion_traffic(ins, called, comps, shapes)
+                cost.traffic_bytes += ft
+                # pure dtype-conversion fusions (XLA CPU wraps the f32<->bf16
+                # casts it inserts around bf16 dots): attribute as convert
+                # churn so the TPU-corrected memory term can exclude them
+                body_ops = {i.op for i in called.instrs if i.op != "parameter"}
+                if body_ops and body_ops <= {"convert", "copy", "bitcast"}:
+                    cost.convert_traffic += ft
+        elif op == "call":
+            m = _ATTR_TO_APPLY.search(ins.rest)
+            if m and m.group(1) in comps:
+                cost.merge_scaled(_comp_cost(comps[m.group(1)], comps, shapes, memo, tpu_dtype_correction), 1.0)
+        elif op == "conditional":
+            m = _ATTR_BRANCHES.search(ins.rest)
+            if m:
+                subs = [
+                    _comp_cost(comps[n.strip().lstrip("%")], comps, shapes, memo, tpu_dtype_correction)
+                    for n in m.group(1).split(",")
+                    if n.strip().lstrip("%") in comps
+                ]
+                if subs:
+                    worst = max(subs, key=lambda c: c.dot_flops + c.traffic_bytes)
+                    cost.merge_scaled(worst, 1.0)
+        elif op in _SKIP_CALLED:
+            pass
+    memo[comp.name] = cost
+    return cost
+
+
+def _fusion_traffic(ins: _Instr, called: _Comp, comps: Dict[str, _Comp],
+                    shapes: Dict[str, str]) -> float:
+    """Boundary traffic of a fusion: result + per-operand effective bytes.
+
+    A fusion operand consumed *only* through dynamic-slice / as the target of
+    dynamic-update-slice (the scan access pattern) is charged the slice
+    bytes, not the whole (L, ...) stacked buffer — otherwise loop-carried
+    stacks would be overcounted by n_layers.
+    """
+    # map internal parameter name -> (index, full bytes)
+    params: Dict[str, Tuple[int, int]] = {}
+    for i in called.instrs:
+        if i.op == "parameter":
+            mm = re.match(r"\s*(\d+)", i.args)
+            if mm:
+                params[i.name] = (int(mm.group(1)), _type_bytes(i.rtype))
+    indexed_bytes: Dict[str, float] = {n: 0.0 for n in params}
+    full: Dict[str, bool] = {n: False for n in params}
+    for i in called.instrs:
+        if i.op == "parameter":
+            continue
+        refs = _OPERAND_RE.findall(i.args)
+        for pos, r in enumerate(refs):
+            if r not in params:
+                continue
+            if i.op == "dynamic-slice" and pos == 0:
+                indexed_bytes[r] = max(indexed_bytes[r], 2.0 * _type_bytes(i.rtype))
+            elif i.op == "dynamic-update-slice" and pos == 0 and len(refs) > 1:
+                ub = _type_bytes(shapes.get(refs[1], "f32[]"))
+                indexed_bytes[r] = max(indexed_bytes[r], 2.0 * ub)
+            else:
+                full[r] = True
+    by_index: Dict[int, float] = {}
+    for name, (idx, fb) in params.items():
+        by_index[idx] = float(fb) if full[name] or indexed_bytes[name] == 0.0 else indexed_bytes[name]
+    total = float(_type_bytes(ins.rtype))
+    operand_names = _OPERAND_RE.findall(ins.args)
+    for pos, name in enumerate(operand_names):
+        if pos in by_index:
+            total += by_index[pos]
+        elif name in shapes:
+            total += _type_bytes(shapes[name])
+    return total
+
+
+def analyze_hlo(text: str, tpu_dtype_correction: bool = True) -> HloCost:
+    comps, shapes, entry = _parse_module(text)
+    if entry is None or entry not in comps:
+        return HloCost()
+    memo: Dict[str, HloCost] = {}
+    return _comp_cost(comps[entry], comps, shapes, memo, tpu_dtype_correction)
+
+
+# --- legacy helpers (kept for tests/benchmarks) --------------------------------
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    return analyze_hlo(hlo_text).collectives
+
+
+def total_collective_traffic(hlo_text: str) -> float:
+    return analyze_hlo(hlo_text).collective_traffic
+
+
+def op_histogram(hlo_text: str, top: int = 25) -> Dict[str, int]:
+    ops = re.findall(
+        r"=\s*(?:\([^)]*\)|[a-z0-9_]+\[[^\]]*\][^\s]*)\s+([a-z][a-z0-9-]*)\(", hlo_text
+    )
+    return dict(Counter(ops).most_common(top))

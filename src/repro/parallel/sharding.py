@@ -1,0 +1,126 @@
+"""Logical-axis sharding rules -> PartitionSpec / NamedSharding resolution.
+
+Every ParamSpec / cache-spec leaf carries logical axis names; a *policy*
+maps each logical name to an ordered list of candidate mesh-axis tuples.
+Resolution is greedy left-to-right over the leaf's dims with two constraints:
+
+  * divisibility — a dim is sharded over a candidate only if the candidate's
+    total mesh extent divides the dim;
+  * exclusivity — a mesh axis is used at most once per leaf.
+
+Candidates referencing mesh axes absent from the current mesh (e.g. "pod" on
+the single-pod mesh) are skipped, so one policy serves both meshes.
+
+Policies:
+
+* ``train`` — batch over (pod, data); FSDP: the largest non-TP weight dim
+  ("embed"/"vocab-alt") over (pod, data); TP over "model" (heads / mlp /
+  vocab).  Optimizer moments inherit the param leaf's spec.
+* ``serve`` — weights as train (FSDP+TP ⇒ per-layer all-gather: the
+  *baseline* the roofline hillclimb starts from); caches over batch + heads.
+* ``serve_2dtp`` — beyond-baseline: weight-stationary 2D tensor parallelism
+  (contraction dims sharded over "data", output dims over "model") so decode
+  moves activations, not weights.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.common import ParamSpec
+
+Candidate = Tuple[str, ...]
+Rules = Dict[str, List[Candidate]]
+
+_TRAIN_RULES: Rules = {
+    "vocab": [("model",)],
+    "embed": [("pod", "data"), ("data",)],
+    "embed2": [("model",)],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "head_dim": [("model",)],
+    "mlp": [("model",)],
+    "expert": [("model",), ("data",)],   # 8 experts vs 16-wide axes: falls through
+    "layers": [],
+    "batch": [("pod", "data"), ("data",)],
+    "kv_seq": [("data",)],
+}
+
+_SERVE_RULES: Rules = dict(_TRAIN_RULES)
+
+_SERVE_2DTP_RULES: Rules = {
+    **_TRAIN_RULES,
+    # weight-stationary: contraction dim over data, output dim over model
+    "embed": [("data",)],
+    "vocab": [("model",)],
+    "batch": [("pod",), ()],   # tiny decode batches stay near-replicated
+    "kv_seq": [("data",)],
+}
+
+POLICIES: Dict[str, Rules] = {
+    "train": _TRAIN_RULES,
+    "serve": _SERVE_RULES,
+    "serve_2dtp": _SERVE_2DTP_RULES,
+}
+
+
+def resolve_pspec(
+    shape: Sequence[int], logical: Sequence[Optional[str]], mesh: Mesh, rules: Rules
+) -> P:
+    used: set = set()
+    parts: List[Any] = []
+    for dim, name in zip(shape, logical):
+        assigned = None
+        if name is not None:
+            for cand in rules.get(name, []):
+                axes = tuple(cand)
+                if not axes:
+                    continue
+                if any(a in used or a not in mesh.shape for a in axes):
+                    continue
+                extent = int(np.prod([mesh.shape[a] for a in axes]))
+                if extent > 1 and dim % extent == 0:
+                    assigned = axes if len(axes) > 1 else axes[0]
+                    used.update(axes)
+                    break
+        parts.append(assigned)
+    # trim trailing Nones for tidier specs
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def spec_sharding(spec: ParamSpec, mesh: Mesh, rules: Rules) -> NamedSharding:
+    return NamedSharding(mesh, resolve_pspec(spec.shape, spec.logical, mesh, rules))
+
+
+def tree_shardings(spec_tree, mesh: Mesh, policy: str = "train"):
+    """Map a ParamSpec tree to a NamedSharding tree."""
+    rules = POLICIES[policy]
+    return jax.tree.map(
+        lambda s: spec_sharding(s, mesh, rules),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def batch_shardings(input_spec_tree, mesh: Mesh, policy: str = "train"):
+    """Shardings for model inputs: leading batch dim over (pod, data);
+    scalars and trailing dims replicated."""
+    rules = POLICIES[policy]
+
+    def _one(sds: jax.ShapeDtypeStruct) -> NamedSharding:
+        if len(sds.shape) == 0:
+            return NamedSharding(mesh, P())
+        logical = ["batch"] + [None] * (len(sds.shape) - 1)
+        return NamedSharding(mesh, resolve_pspec(sds.shape, logical, mesh, rules))
+
+    return jax.tree.map(_one, input_spec_tree)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,113 @@
+"""Commit protocol (§4.3): Qww vs Qwr, DSN/CSN watermarks, heartbeats."""
+
+import pytest
+
+from repro.core import EngineConfig, PoplarEngine, Txn, Worker
+
+
+class Cell:
+    def __init__(self, ssn=0):
+        self.ssn = ssn
+
+
+def _engine(n=2):
+    return PoplarEngine(EngineConfig(n_buffers=n, device_kind="null"))
+
+
+def test_qww_commits_on_own_dsn_only():
+    """A write-only txn commits as soon as its own buffer's DSN covers it,
+    even if the other buffer never flushed (scenario d/f freedom)."""
+    e = _engine()
+    w0, w1 = Worker(e, 0), Worker(e, 1)
+    a, b = Cell(), Cell()
+    t0 = Txn(tid=1, write_set=[("a", b"1")])
+    w0.run(t0, [], [a])
+    # put something unflushed in buffer 1 so its DSN stays behind
+    t1 = Txn(tid=2, write_set=[("b", b"2")])
+    w1.run(t1, [], [b])
+    # flush ONLY buffer 0
+    e.buffers[0].force_establish()
+    e.buffers[0].flush_ready(e.devices[0])
+    assert w0.drain() == 1 and t0.committed
+    assert not t1.committed
+
+
+def test_qwr_waits_for_csn():
+    """A RAW-carrying txn cannot commit until every buffer's DSN passes its
+    SSN (scenario c prevention)."""
+    e = _engine()
+    w0, w1 = Worker(e, 0), Worker(e, 1)
+    a, b = Cell(), Cell()
+    t0 = Txn(tid=1, write_set=[("a", b"1")])
+    w0.run(t0, [], [a])          # ssn 1 in buffer 0 (NOT flushed)
+    t1 = Txn(tid=2, read_set=[("a", a.ssn)], write_set=[("b", b"2")])
+    w1.run(t1, [a], [b])         # ssn 2 in buffer 1, RAW on t0
+    # flush only buffer 1: t1's record durable but its predecessor is not
+    e.buffers[1].force_establish()
+    e.buffers[1].flush_ready(e.devices[1])
+    e.commit.advance_csn()
+    assert w1.drain() == 0 and not t1.committed
+    # flush buffer 0: its DSN reaches t0.ssn=1 but CSN=min(1, dsn1) < t1.ssn,
+    # so t1 still waits (CSN is conservative)...
+    e.buffers[0].force_establish()
+    e.buffers[0].flush_ready(e.devices[0])
+    e.commit.advance_csn()
+    assert w0.drain() == 1 and t0.committed  # t0's own-buffer commit is fine
+    assert w1.drain() == 0 and not t1.committed
+    # ...until the idle buffer 0 heartbeats up to the global frontier
+    e.logger_tick(0, force=True)
+    e.commit.advance_csn()
+    assert w1.drain() == 1 and t1.committed
+
+
+def test_read_only_commits_via_csn():
+    e = _engine()
+    w0, w1 = Worker(e, 0), Worker(e, 1)
+    a = Cell()
+    t0 = Txn(tid=1, write_set=[("a", b"1")])
+    w0.run(t0, [], [a])
+    ro = Txn(tid=2, read_set=[("a", a.ssn)])
+    w1.run(ro, [a], [])
+    assert ro.ssn == t0.ssn  # read-only: ssn = base, no +1
+    e.quiesce([0, 1], timeout=5)
+    assert ro.committed
+
+
+def test_heartbeat_unblocks_idle_buffer():
+    """An idle lane must not pin the CSN forever (liveness — see
+    engine._emit_heartbeat)."""
+    e = _engine()
+    w0, w1 = Worker(e, 0), Worker(e, 1)
+    a, b = Cell(), Cell()
+    # only worker 0 (buffer 0) does writes; buffer 1 stays idle
+    t0 = Txn(tid=1, write_set=[("a", b"1")])
+    w0.run(t0, [], [a])
+    t1 = Txn(tid=3, read_set=[("a", a.ssn)], write_set=[("b", b"2")])
+    t1.worker_id = 0
+    e.allocate(t1, [a], [b])
+    from repro.core import ssn as ssn_mod
+
+    ssn_mod.writeback(t1.ssn, [b])
+    e.publish(t1)
+    # logger ticks must heartbeat buffer 1 past t1.ssn
+    for i in range(2):
+        e.logger_tick(i, force=True)
+    for i in range(2):
+        e.logger_tick(i, force=True)
+    assert e.commit.csn >= t1.ssn
+    assert e.drain(0) == 2
+    assert t1.committed
+
+
+def test_csn_is_min_of_dsns():
+    e = _engine(3)
+    workers = [Worker(e, i) for i in range(3)]
+    cells = [Cell() for _ in range(3)]
+    for i, w in enumerate(workers):
+        w.run(Txn(tid=10 + i, write_set=[(f"k{i}", b"v")]), [], [cells[i]])
+    # flush buffers 0 and 2 only
+    for i in (0, 2):
+        e.buffers[i].force_establish()
+        e.buffers[i].flush_ready(e.devices[i])
+    csn = e.commit.advance_csn()
+    assert csn == e.buffers[1].dsn == 0

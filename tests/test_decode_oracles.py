@@ -1,0 +1,83 @@
+"""Decode-cache correctness oracles: prefill+decode must equal one long
+prefill — including sliding-window ring-cache *wraparound* and hybrid/rwkv
+state carry."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+from repro.models.api import build_model
+
+
+def _continuation_check(arch, prompt, total, cache_len, atol=3e-2, **overrides):
+    cfg = reduced(get_config(arch), **overrides)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, total)), jnp.int32)
+
+    full_logits, _ = model.prefill(params, {"tokens": toks}, cache_len=cache_len)
+    logits, cache = model.prefill(params, {"tokens": toks[:, :prompt]}, cache_len=cache_len)
+    for i in range(prompt, total):
+        logits, cache = model.decode_step(
+            params, cache, toks[:, i : i + 1], jnp.asarray(i, jnp.int32)
+        )
+    np.testing.assert_allclose(
+        np.asarray(logits[0, 0], np.float32),
+        np.asarray(full_logits[0, -1], np.float32),
+        atol=atol, rtol=atol,
+    )
+    return cfg
+
+
+def test_full_attention_continuation():
+    _continuation_check("deepseek-7b", prompt=8, total=14, cache_len=16)
+
+
+def test_swa_ring_wraparound():
+    """Sliding-window ring cache must stay exact across slot wraparound:
+    window 8, decode well past 2x the window."""
+    _continuation_check(
+        "mixtral-8x22b", prompt=6, total=28, cache_len=8,
+        sliding_window=8, full_attn_layers=(),
+    )
+
+
+def test_hybrid_state_continuation():
+    """hymba: SWA ring cache + SSM state must both carry across decode."""
+    _continuation_check(
+        "hymba-1.5b", prompt=6, total=20, cache_len=8,
+        sliding_window=8, full_attn_layers=(),
+    )
+
+
+def test_rwkv_state_continuation():
+    """rwkv6: wkv + token-shift states replace the KV cache entirely."""
+    _continuation_check("rwkv6-7b", prompt=6, total=18, cache_len=8)
+
+
+def test_whisper_decode_continuation():
+    cfg = reduced(get_config("whisper-medium"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    frames = jnp.asarray(rng.normal(0, 0.5, (1, cfg.enc_dec.enc_seq, cfg.d_model)), jnp.bfloat16)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)), jnp.int32)
+
+    full_logits, _ = model.prefill(
+        params, {"frame_embeds": frames, "tokens": toks}, cache_len=16)
+    logits, cache = model.prefill(
+        params, {"frame_embeds": frames, "tokens": toks[:, :8]}, cache_len=16)
+    for i in range(8, 12):
+        logits, cache = model.decode_step(
+            params, cache, toks[:, i : i + 1], jnp.asarray(i, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(logits[0, 0], np.float32),
+        np.asarray(full_logits[0, -1], np.float32),
+        atol=5e-2, rtol=5e-2,
+    )

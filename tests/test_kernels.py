@@ -1,0 +1,146 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles.
+
+bf16 tolerances: inputs are cast to bf16 (~3 decimal digits), accumulation
+is fp32 in both kernel and oracle, so output atol is dominated by the input
+rounding — 2e-2 absolute on O(1) data.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.ops import flash_attention, rwkv6, ssm_scan
+from repro.kernels.ref import attention_ref, rwkv6_ref, ssm_scan_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,t,d,causal,window,softcap",
+    [
+        (1, 2, 2, 128, 128, 128, True, None, None),
+        (2, 4, 2, 256, 256, 128, True, None, None),    # GQA
+        (1, 2, 1, 128, 256, 128, False, None, None),   # bidir, longer kv
+        (2, 2, 2, 256, 256, 128, True, 64, None),      # sliding window
+        (1, 2, 2, 128, 128, 128, True, None, 30.0),    # grok softcap
+        (1, 8, 2, 384, 384, 128, True, 128, None),     # window + GQA
+    ],
+)
+def test_flash_attention_vs_ref(b, hq, hkv, s, t, d, causal, window, softcap, dtype):
+    q = jnp.asarray(RNG.normal(0, 1, (b, hq, s, d)), dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (b, hkv, t, d)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (b, hkv, t, d)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=softcap,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), **_tol(dtype)
+    )
+
+
+def test_flash_attention_rejects_misaligned():
+    q = jnp.zeros((1, 2, 100, 128))  # 100 not a multiple of block_q
+    k = v = jnp.zeros((1, 2, 128, 128))
+    with pytest.raises(AssertionError):
+        flash_attention_fwd(q, k, v, interpret=True)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,s,p,n,chunk",
+    [(1, 2, 128, 16, 8, 64), (2, 3, 64, 32, 16, 32), (1, 1, 256, 8, 4, 64)],
+)
+def test_ssm_scan_vs_ref(b, h, s, p, n, chunk, dtype):
+    x = jnp.asarray(RNG.normal(0, 1, (b, h, s, p)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, h, s)), jnp.float32)
+    decay = jnp.asarray(RNG.uniform(0.7, 0.999, (b, h, s)), jnp.float32)
+    bm = jnp.asarray(RNG.normal(0, 1, (b, s, n)), dtype)
+    cm = jnp.asarray(RNG.normal(0, 1, (b, s, n)), dtype)
+    y, st = ssm_scan(x, dt, decay, bm, cm, chunk=chunk, interpret=True)
+    yr, str_ = ssm_scan_ref(x, dt, decay, bm, cm)
+    np.testing.assert_allclose(
+        y.astype(jnp.float32), yr.astype(jnp.float32), **_tol(dtype)
+    )
+    np.testing.assert_allclose(st, str_, atol=5e-2 if dtype == jnp.bfloat16 else 2e-4,
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,s,kd,vd,chunk",
+    [(1, 2, 64, 16, 16, 32), (2, 2, 128, 32, 32, 32), (1, 1, 96, 64, 64, 32)],
+)
+def test_rwkv6_vs_ref(b, h, s, kd, vd, chunk, dtype):
+    r = jnp.asarray(RNG.normal(0, 0.5, (b, h, s, kd)), dtype)
+    k = jnp.asarray(RNG.normal(0, 0.5, (b, h, s, kd)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (b, h, s, vd)), dtype)
+    w = jnp.asarray(RNG.uniform(0.5, 0.999, (b, h, s, kd)), jnp.float32)
+    u = jnp.asarray(RNG.normal(0, 0.5, (h, kd)), jnp.float32)
+    y, st = rwkv6(r, k, v, w, u, chunk=chunk, interpret=True)
+    yr, str_ = rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(
+        y.astype(jnp.float32), yr.astype(jnp.float32), **_tol(dtype)
+    )
+
+
+def test_rwkv6_strong_decay_stability():
+    """Strong decay (w -> 0) must not overflow: the kernel uses only
+    later-minus-earlier log-cumsum differences (exponents <= 0)."""
+    b, h, s, kd, vd = 1, 1, 64, 16, 16
+    r = jnp.asarray(RNG.normal(0, 0.5, (b, h, s, kd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 0.5, (b, h, s, kd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, h, s, vd)), jnp.float32)
+    w = jnp.full((b, h, s, kd), 0.01, jnp.float32)  # extreme decay
+    u = jnp.zeros((h, kd), jnp.float32)
+    y, st = rwkv6(r, k, v, w, u, chunk=32, interpret=True)
+    yr, _ = rwkv6_ref(r, k, v, w, u)
+    assert bool(jnp.isfinite(y).all())
+    np.testing.assert_allclose(y, yr, atol=1e-4, rtol=1e-3)
+
+
+# --- model-level optimized-impl equivalence (flash vjp, chunked mixers) ------
+
+def test_flash_vjp_matches_masked_scan():
+    from repro.models.attention import attend
+
+    b, s, h, kv, d = 2, 64, 4, 2, 16
+    q = jnp.asarray(RNG.normal(0, 1, (b, s, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, s, kv, d)), jnp.float32)
+
+    def loss(impl):
+        def f(q, k, v):
+            o = attend(q, k, v, causal=True, impl=impl, chunk_k=32)
+            return (o.astype(jnp.float32) ** 2).sum()
+        return f
+
+    l0, g0 = jax.value_and_grad(loss("masked_scan"), argnums=(0, 1, 2))(q, k, v)
+    l1, g1 = jax.value_and_grad(loss("flash"), argnums=(0, 1, 2))(q, k, v)
+    np.testing.assert_allclose(l0, l1, rtol=2e-4)
+    for a, b_ in zip(g0, g1):
+        np.testing.assert_allclose(a, b_, atol=3e-3, rtol=3e-3)
+
+
+@pytest.mark.parametrize("arch", ["hymba-1.5b", "rwkv6-7b"])
+def test_chunked_mixer_matches_scan(arch):
+    import dataclasses
+
+    from repro.configs.base import ShapeConfig, reduced
+    from repro.configs.registry import get_config, make_inputs
+    from repro.models.api import build_model
+
+    r = reduced(get_config(arch), n_layers=2)
+    m0 = build_model(dataclasses.replace(r, mixer_impl="scan"))
+    m1 = build_model(dataclasses.replace(r, mixer_impl="chunked"))
+    params = m0.init(jax.random.PRNGKey(0))
+    batch = make_inputs(r, ShapeConfig("t", 64, 2, "train"))
+    l0 = m0.train_loss(params, batch)
+    l1 = m1.train_loss(params, batch)
+    np.testing.assert_allclose(l0, l1, rtol=2e-3)

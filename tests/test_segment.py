@@ -1,0 +1,81 @@
+"""Algorithm 2 (segment index / DSN advancement) unit tests."""
+
+import pytest
+
+from repro.core.log_buffer import LogBuffer
+from repro.core.segment import CLOSED, OPEN, SegmentIndex
+from repro.core.storage import DeviceSpec, StorageDevice
+
+
+def _dev():
+    return StorageDevice(DeviceSpec.null())
+
+
+def test_segment_closes_at_io_unit():
+    buf = LogBuffer(0, capacity=1 << 20, io_unit=128)
+    # allocations below the io unit keep the segment open
+    buf.reserve(0, 64)
+    assert buf.segindex.generating().stat == OPEN
+    # crossing the io unit closes it
+    buf.reserve(0, 100)
+    assert buf.segindex.segments[0].stat == CLOSED
+    assert buf.segindex.cur_generate_seg == 1
+
+
+def test_hole_blocks_flush():
+    """A reserved-but-unfilled record (buffer hole) must block the flush of
+    its segment — the central correctness property of Figure 4."""
+    buf = LogBuffer(0, capacity=1 << 20, io_unit=64)
+    dev = _dev()
+    s1, off1, seg1 = buf.reserve(0, 40)
+    s2, off2, seg2 = buf.reserve(0, 40)  # closes segment (80 >= 64)
+    buf.fill(off2, seg2, b"y" * 40)      # second record filled first
+    assert buf.flush_ready(dev) == 0     # hole from record 1 blocks
+    assert buf.dsn == 0
+    buf.fill(off1, seg1, b"x" * 40)
+    assert buf.flush_ready(dev) == 1
+    assert buf.dsn == s2                 # DSN = largest SSN in the segment
+
+
+def test_dsn_advances_in_segment_order():
+    buf = LogBuffer(0, capacity=1 << 20, io_unit=32)
+    dev = _dev()
+    ssns = []
+    for i in range(6):
+        s, off, seg = buf.reserve(0, 40)  # each record closes a segment
+        buf.fill(off, seg, bytes(40))
+        ssns.append(s)
+    n = buf.flush_ready(dev)
+    assert n == 6
+    assert buf.dsn == ssns[-1]
+    assert dev.bytes_written == 240
+
+
+def test_timer_close_partial_segment():
+    buf = LogBuffer(0, capacity=1 << 20, io_unit=1 << 16)
+    dev = _dev()
+    s, off, seg = buf.reserve(0, 40)
+    buf.fill(off, seg, bytes(40))
+    assert buf.flush_ready(dev) == 0     # below io unit: still open
+    assert buf.force_establish() is True  # group-commit timer path
+    assert buf.flush_ready(dev) == 1
+    assert buf.dsn == s
+
+
+def test_ring_wraparound():
+    buf = LogBuffer(0, capacity=128, io_unit=32)
+    dev = _dev()
+    total = 0
+    for i in range(10):
+        s, off, seg = buf.reserve(0, 40)
+        buf.fill(off, seg, bytes([i]) * 40)
+        buf.force_establish()
+        assert buf.flush_ready(dev) >= 1
+        total += 40
+    assert dev.bytes_written == total
+    assert buf.pending_bytes() == 0
+
+
+def test_empty_segment_not_closed():
+    buf = LogBuffer(0, capacity=1 << 16)
+    assert buf.force_establish() is False

@@ -1,0 +1,143 @@
+"""Sharding rule resolution + small-mesh pjit integration (subprocess with
+forced host devices so the main test process keeps 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.models.common import ParamSpec
+import jax.numpy as jnp
+
+
+class _FakeMesh:
+    """Duck-typed mesh exposing .shape for rule resolution tests."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def _resolve(shape, logical, mesh_shape, policy="train"):
+    from repro.parallel.sharding import POLICIES, resolve_pspec
+
+    return tuple(resolve_pspec(shape, logical, _FakeMesh(mesh_shape), POLICIES[policy]))
+
+
+def test_fsdp_tp_weight():
+    # (d_model, d_ff) -> embed over (pod,data), mlp over model
+    spec = _resolve((6144, 16384), ("embed", "mlp"), {"pod": 2, "data": 16, "model": 16})
+    assert spec == (("pod", "data"), "model")
+
+
+def test_single_pod_fallback():
+    # no 'pod' axis: embed falls back to (data,)
+    spec = _resolve((6144, 16384), ("embed", "mlp"), {"data": 16, "model": 16})
+    assert spec == ("data", "model")
+
+
+def test_divisibility_fallback_heads():
+    # qwen2: 12 heads don't divide 16 -> heads unsharded
+    spec = _resolve((1536, 12 * 128), ("embed", "heads"), {"data": 16, "model": 16})
+    assert spec == ("data", "model") or spec[0] == "data"
+    # hymba q proj: 25*64=1600 divides 16 even though heads=25 don't
+    spec = _resolve((1600, 1600), ("embed", "heads"), {"data": 16, "model": 16})
+    assert spec == ("data", "model")
+
+
+def test_expert_dim_unsharded():
+    # 8 experts vs 16-wide axes: falls through to replicated on E
+    spec = _resolve((8, 6144, 32768), ("expert", "embed", "mlp"), {"data": 16, "model": 16})
+    assert spec[0] is None and spec[1] == "data" and spec[2] == "model"
+
+
+def test_no_axis_reuse_per_leaf():
+    # batch grabs (pod,data); kv_seq must not reuse them
+    spec = _resolve(
+        (32, 128, 32768, 8, 128),
+        ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        {"pod": 2, "data": 16, "model": 16},
+    )
+    assert spec[1] == ("pod", "data")
+    assert spec[2] is None           # data already used by batch
+    assert spec[4] == "model" or spec[3] == "model"
+
+
+def test_long500k_seq_sharding():
+    # batch=1 unshardable -> kv_seq gets the data axis (SP)
+    spec = _resolve(
+        (32, 1, 4096, 8, 128),
+        ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        {"data": 16, "model": 16},
+    )
+    assert spec[1] is None and spec[2] == "data"
+
+
+SUBPROCESS_TEST = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs.base import reduced, ShapeConfig
+    from repro.configs.registry import get_config, make_inputs
+    from repro.models.api import build_model
+    from repro.models.common import specs_to_sds, init_params
+    from repro.optim import adamw
+    from repro.parallel import sharding as shd
+    from repro.parallel.axes import logical_context
+    from repro.train.step import make_train_step
+    from repro.launch.mesh import make_smoke_mesh
+
+    mesh = make_smoke_mesh()  # (2, 2) data x model
+    cfg = reduced(get_config("tinyllama-1.1b"), n_layers=2, d_model=64, vocab=256)
+    model = build_model(cfg)
+    pspecs = model.param_specs()
+    opt_cfg = adamw.AdamWConfig()
+    step = make_train_step(model, opt_cfg)
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init(params, opt_cfg)
+    batch = make_inputs(cfg, ShapeConfig("t", 32, 4, "train"))
+
+    param_sh = shd.tree_shardings(pspecs, mesh, "train")
+    opt_sh = shd.tree_shardings(adamw.opt_state_specs(pspecs, opt_cfg), mesh, "train")
+    batch_sh = shd.batch_shardings({k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}, mesh, "train")
+    rep = shd.replicated(mesh)
+
+    def wrapped(p, o, b):
+        with logical_context(mesh, "train"):
+            return step(p, o, b)
+
+    jitted = jax.jit(wrapped, in_shardings=(param_sh, opt_sh, batch_sh),
+                     out_shardings=(param_sh, opt_sh, {"grad_norm": rep, "lr": rep, "loss": rep}))
+    with jax.set_mesh(mesh):
+        p1, o1, m1 = jitted(params, opt, batch)
+        p2, o2, m2 = jitted(p1, o1, batch)
+    # compare against single-device execution
+    sp, so, sm = step(params, opt, batch)
+    err = abs(float(m1["loss"]) - float(sm["loss"]))
+    print(json.dumps({"loss_mesh": float(m1["loss"]), "loss_single": float(sm["loss"]),
+                      "err": err, "loss2": float(m2["loss"])}))
+    assert err < 2e-2, err
+""")
+
+
+def test_pjit_matches_single_device(tmp_path):
+    """The sharded train step must produce the same loss as single-device."""
+    script = tmp_path / "mesh_test.py"
+    script.write_text(SUBPROCESS_TEST)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, str(script)], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))), env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["err"] < 2e-2

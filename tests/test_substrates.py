@@ -1,0 +1,137 @@
+"""Substrate tests: data pipeline determinism/resume, AdamW, gradient
+compression, serving engine, HLO cost model sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.optim import adamw
+from repro.parallel import compression
+from repro.parallel.hlo_analysis import analyze_hlo
+
+
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(vocab=100, batch=2, seq_len=16, seed=7)
+    p1 = TokenPipeline(cfg)
+    batches = [p1.next_batch() for _ in range(5)]
+    # resume from cursor 3 must reproduce batch 3 exactly
+    p2 = TokenPipeline.restore(cfg, {"cursor": np.asarray(3)})
+    np.testing.assert_array_equal(p2.next_batch()["tokens"], batches[3]["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(batches[0]["tokens"][:, 1:], batches[0]["labels"][:, :-1])
+
+
+def test_adamw_decreases_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1, total_steps=1000)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw.init(params, cfg)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state, m = adamw.update(g, state, params, cfg)
+    assert float(loss(params)) < 0.2
+    assert int(state["count"]) == 50
+
+
+def test_adamw_grad_clip():
+    cfg = adamw.AdamWConfig(lr=1e-3, grad_clip=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init(params, cfg)
+    g = {"w": jnp.asarray([100.0, 0.0, 0.0])}
+    _, _, m = adamw.update(g, state, params, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(100.0)
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (1000,)), jnp.float32)
+    y = compression.fake_quantize(x)
+    err = float(jnp.max(jnp.abs(x - y)))
+    assert err <= float(jnp.max(jnp.abs(x))) / 127 + 1e-6
+
+
+def test_error_feedback_accumulates():
+    x = jnp.full((64,), 1e-4, jnp.float32)   # below one quantization step
+    err = jnp.zeros_like(x)
+    total = jnp.zeros_like(x)
+    for _ in range(40):
+        q, err = compression.ef_quantize(x, err)
+        total = total + q
+    # with error feedback the mean emitted value converges to the input
+    np.testing.assert_allclose(float(total.mean()) / 40, 1e-4, rtol=0.2)
+
+
+def test_compressed_psum_shardmap():
+    import os
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (covered by test_sharding subprocess)")
+
+
+def test_train_step_accum_equivalence():
+    from repro.configs.base import ShapeConfig, reduced
+    from repro.configs.registry import get_config, make_inputs
+    from repro.models.api import build_model
+    from repro.train.step import make_train_step
+
+    cfg = reduced(get_config("tinyllama-1.1b"), n_layers=2)
+    model = build_model(cfg)
+    ocfg = adamw.AdamWConfig(lr=1e-3)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init(params, ocfg)
+    batch = make_inputs(cfg, ShapeConfig("t", 32, 4, "train"))
+
+    s1 = make_train_step(model, ocfg, accum_steps=1)
+    s2 = make_train_step(model, ocfg, accum_steps=2)
+    _, _, m1 = s1(params, opt, batch)
+    _, _, m2 = s2(params, opt, batch)
+    # microbatched loss == mean of microbatch losses ~= full-batch loss
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=5e-3)
+
+
+def test_hlo_cost_model_counts_loops():
+    """scan-over-layers flops must equal the unrolled equivalent."""
+    D, L = 64, 4
+
+    def layer(x, w):
+        return jnp.tanh(x @ w)
+
+    def scan_model(ws, x):
+        def body(x, w):
+            return layer(x, w), None
+        x, _ = jax.lax.scan(body, x, ws)
+        return x.sum()
+
+    def unroll_model(ws, x):
+        for i in range(L):
+            x = layer(x, ws[i])
+        return x.sum()
+
+    ws = jnp.zeros((L, D, D))
+    x = jnp.zeros((8, D))
+    c_scan = analyze_hlo(jax.jit(scan_model).lower(ws, x).compile().as_text())
+    c_unroll = analyze_hlo(jax.jit(unroll_model).lower(ws, x).compile().as_text())
+    assert c_scan.dot_flops == pytest.approx(c_unroll.dot_flops, rel=0.01)
+    assert c_scan.dot_flops == pytest.approx(2 * 8 * D * D * L, rel=0.01)
+    assert c_scan.while_trips == [L]
+
+
+def test_serve_engine_reduced():
+    from repro.configs.base import reduced
+    from repro.configs.registry import get_config
+    from repro.models.api import build_model
+    from repro.serve.engine import ServeEngine
+
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, cache_len=48)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)}
+    res = eng.generate(batch, max_new=4)
+    assert res.tokens.shape == (2, 4)
+    assert np.all(res.tokens >= 0) and np.all(res.tokens < cfg.vocab)
