@@ -1,20 +1,31 @@
-"""Tables 2–3 — recovery performance (checkpoint + log recovery time).
+"""Tables 2–3 — recovery performance (checkpoint + log recovery time), plus
+the replay-throughput comparison for the vectorized recovery engine.
 
-A scaled workload journals through each variant onto n emulated SSDs with a
-mid-run fuzzy checkpoint; we then crash and recover, reporting
+Part 1 (paper tables): a scaled workload journals through each variant onto
+n emulated SSDs with a mid-run fuzzy checkpoint; we then crash and recover,
+reporting
 
   * checkpoint recovery time = max over devices of (ckpt bytes / read bw)
     + parallel in-memory replay (CENTR: single device serializes reads);
   * log recovery time analogously over log bytes;
-  * measured wall replay time (CPU component, parallel threads).
+  * measured wall replay time (CPU component).
 
 Per the paper, recovery time is proportional to bytes-read / device
 parallelism: POPLAR/SILO with n devices ≈ CENTR / n.
+
+Part 2 (``bench=replay``): synthesized multi-device logs (write-only and
+RAW-carrying records, one device's flush frontier lagging so RSNe actually
+skips durable-but-uncommitted records) replayed through the scalar oracle
+and the batched vectorized engine across 1–8 devices, reporting the replay
+stage's wall time and records/s for each — the vectorized path must come out
+>= 5x at 100k+ records.  A small ``bench=replay_kernel`` row exercises the
+Pallas SSN scatter-max apply (interpret mode on CPU, so sized down).
 """
 
 from __future__ import annotations
 
 import os
+import random
 import shutil
 import sys
 import tempfile
@@ -22,14 +33,24 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from _util import emit, run_bench, ycsb_write_factory  # noqa: E402
+from _util import FAST, emit, run_bench, ycsb_write_factory  # noqa: E402
 
-from repro.core import CheckpointDaemon, EngineConfig, PoplarEngine, recover  # noqa: E402
+from repro.core import CheckpointDaemon, EngineConfig, PoplarEngine, Txn, recover  # noqa: E402
+from repro.core.recovery import (  # noqa: E402
+    RecoveredState,
+    _replay_scalar,
+    compute_rsne,
+    replay_columnar,
+)
+from repro.core.txn import decode_columnar, decode_records  # noqa: E402
 from repro.core.variants import CentrEngine, SiloEngine  # noqa: E402
 from repro.db import OCCWorker, Table  # noqa: E402
 from repro.db import ycsb  # noqa: E402
 
 SSD_READ_BW = 1.2e9  # symmetric with write (§6.1)
+
+REPLAY_RECORDS = 20_000 if FAST else 200_000
+REPLAY_KEYS = REPLAY_RECORDS // 10
 
 
 def _run_one(engine_name: str, n_devices: int, tmp: str, n_txns: int = 4000):
@@ -99,6 +120,110 @@ def _run_one(engine_name: str, n_devices: int, tmp: str, n_txns: int = 4000):
     }
 
 
+def _synth_logs(n_devices: int, n_records: int, n_keys: int,
+                val_bytes: int = 64, wr_frac: float = 0.2, seed: int = 1234):
+    """Synthesize per-device framed logs: globally increasing SSNs dealt
+    round-robin (per-device monotone, like flush order), a mix of write-only
+    and RAW-carrying records, and device 0's frontier stopped at ~90% so
+    RSNe genuinely skips tail Qwr records on the other devices."""
+    rng = random.Random(seed)
+    bufs = [bytearray() for _ in range(n_devices)]
+    stall_at = int(n_records * 0.9)
+    ssn = 0
+    for i in range(n_records):
+        ssn += 1
+        d = i % n_devices
+        if n_devices > 1 and d == 0 and i >= stall_at:
+            continue  # device 0 "crashed" with this record still in memory
+        key = f"k{rng.randrange(n_keys):010d}"
+        t = Txn(
+            tid=i,
+            write_set=[(key, ssn.to_bytes(8, "little") * (val_bytes // 8))],
+            read_set=[("dep", 0)] if rng.random() < wr_frac else [],
+        )
+        t.ssn = ssn
+        bufs[d].extend(t.encode())
+    return [bytes(b) for b in bufs]
+
+
+def _best_of(f, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        f()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _bench_replay(n_devices: int, n_records: int):
+    logs = _synth_logs(n_devices, n_records, REPLAY_KEYS)
+
+    t0 = time.perf_counter()
+    device_records = [decode_records(b) for b in logs]
+    t_dec_scalar = time.perf_counter() - t0
+    rsne = compute_rsne(device_records)
+
+    # scalar oracle, lock-free sequential loop (best case for scalar)
+    t_scalar = _best_of(
+        lambda: _replay_scalar(RecoveredState(), device_records, rsne, parallel=False)
+    )
+    st = RecoveredState()
+    st.rsne = rsne
+    _replay_scalar(st, device_records, rsne, parallel=False)
+
+    # the seed's deployed replay path: one thread per device, per-write lock
+    t_scalar_thr = _best_of(
+        lambda: _replay_scalar(RecoveredState(), device_records, rsne, parallel=True),
+        reps=1,
+    )
+
+    t0 = time.perf_counter()
+    cols = [decode_columnar(b) for b in logs]
+    t_dec_vec = time.perf_counter() - t0
+    assert compute_rsne(cols) == rsne
+
+    t_vec = _best_of(lambda: replay_columnar(cols, rsne))
+    data, n_replayed, n_skipped = replay_columnar(cols, rsne)
+
+    assert data == st.data, "vectorized replay diverged from the scalar oracle"
+    assert (n_replayed, n_skipped) == (st.n_replayed, st.n_skipped_uncommitted)
+    return {
+        "bench": "replay",
+        "devices": n_devices,
+        "n_records": n_records,
+        "n_skipped": n_skipped,
+        "scalar_decode_s": round(t_dec_scalar, 4),
+        "vec_decode_s": round(t_dec_vec, 4),
+        "scalar_replay_s": round(t_scalar, 4),
+        "scalar_threaded_s": round(t_scalar_thr, 4),
+        "vec_replay_s": round(t_vec, 4),
+        "scalar_rec_per_s": int(n_records / t_scalar),
+        "vec_rec_per_s": int(n_records / t_vec),
+        "speedup": round(t_scalar / t_vec, 2),
+        "speedup_vs_threaded": round(t_scalar_thr / t_vec, 2),
+    }
+
+
+def _bench_replay_kernel(n_devices: int = 2, n_records: int = 4096):
+    """Pallas scatter-max apply — interpret mode on CPU, so sized down; on
+    TPU the same kernel compiles (see kernels/scatter_max.py)."""
+    logs = _synth_logs(n_devices, n_records, n_keys=512)
+    cols = [decode_columnar(b) for b in logs]
+    rsne = compute_rsne(cols)
+    data_np, _, _ = replay_columnar(cols, rsne)
+    t0 = time.perf_counter()
+    data_k, _, _ = replay_columnar(cols, rsne, use_kernel=True)
+    t_kernel = time.perf_counter() - t0
+    assert data_k == data_np, "pallas replay diverged from the numpy engine"
+    return {
+        "bench": "replay_kernel",
+        "devices": n_devices,
+        "n_records": n_records,
+        "kernel_replay_s": round(t_kernel, 4),
+        "agrees": True,
+    }
+
+
 def run(duration=None):
     rows = []
     for engine_name, nd in (("centr", 1), ("silo", 2), ("poplar", 2), ("poplar", 4)):
@@ -112,7 +237,15 @@ def run(duration=None):
     emit(rows, ["bench", "engine", "devices", "log_MB", "ckpt_MB",
                 "ckpt_recovery_s", "log_recovery_s", "wall_replay_s",
                 "recovered_keys", "rsne"])
-    return rows
+
+    replay_rows = [_bench_replay(nd, REPLAY_RECORDS) for nd in (1, 2, 4, 8)]
+    emit(replay_rows, ["bench", "devices", "n_records", "n_skipped",
+                       "scalar_decode_s", "vec_decode_s", "scalar_replay_s",
+                       "scalar_threaded_s", "vec_replay_s", "scalar_rec_per_s",
+                       "vec_rec_per_s", "speedup", "speedup_vs_threaded"])
+    kernel_row = _bench_replay_kernel()
+    emit([kernel_row], ["bench", "devices", "n_records", "kernel_replay_s", "agrees"])
+    return rows + replay_rows + [kernel_row]
 
 
 if __name__ == "__main__":

@@ -13,10 +13,10 @@ Public surface:
 
 from .engine import EngineConfig, LoggingEngine, PoplarEngine, Worker
 from .variants import CentrEngine, NvmDEngine, SiloEngine
-from .recovery import RecoveredState, recover
+from .recovery import RecoveredState, recover, replay_columnar
 from .checkpoint import CheckpointDaemon, load_latest_checkpoint
 from .storage import DeviceSpec, StorageDevice, make_devices
-from .txn import Txn, LogRecord, decode_records
+from .txn import Txn, LogRecord, ColumnarLog, decode_records, decode_columnar
 
 __all__ = [
     "EngineConfig",
@@ -27,6 +27,7 @@ __all__ = [
     "SiloEngine",
     "NvmDEngine",
     "recover",
+    "replay_columnar",
     "RecoveredState",
     "CheckpointDaemon",
     "load_latest_checkpoint",
@@ -35,5 +36,7 @@ __all__ = [
     "make_devices",
     "Txn",
     "LogRecord",
+    "ColumnarLog",
     "decode_records",
+    "decode_columnar",
 ]

@@ -20,20 +20,36 @@ Two stages:
    A device with *no* durable record pins RSNe to 0: its DSN never advanced,
    so no RAW-dependent transaction can have committed.
 
-Replay across devices is order-free thanks to the per-tuple SSN guard, so
-recovery threads can process log files concurrently (tested threaded and
-sequentially — results must be identical).
+Replay across devices is order-free thanks to the per-tuple SSN guard, so it
+vectorizes: the default path decodes each log into columnar arrays
+(:class:`~repro.core.txn.ColumnarLog`), concatenates all durable-committed
+writes with the checkpoint image, and resolves last-writer-wins in one
+segment-sorted SSN reduction (sort by key, take the max-SSN entry per key
+segment) instead of a per-record guarded dict walk.  Three replay modes:
+
+* ``mode="vectorized"`` (default) — the batched numpy reduction;
+* ``mode="pallas"``     — same batching, but the guarded apply against the
+  recovered image runs through the Pallas SSN scatter-max kernel
+  (:func:`repro.kernels.ops.ssn_scatter_max`) — interpret mode on CPU,
+  compiled on TPU;
+* ``mode="scalar"``     — the original per-record replay, kept as the
+  correctness oracle (tested equivalent on randomized logs).
+
+All modes produce identical :class:`RecoveredState` contents, including the
+``rsns``/``rsne`` watermarks and skipped-uncommitted counts.
 """
 
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from .checkpoint import CheckpointData, load_latest_checkpoint
 from .storage import StorageDevice
-from .txn import LogRecord, decode_records
+from .txn import ColumnarLog, LogRecord, decode_columnar, decode_records
 
 
 @dataclass
@@ -55,14 +71,24 @@ class RecoveredState:
         return v[1] if v is not None else 0
 
 
-def compute_rsne(device_records: Sequence[Sequence[LogRecord]]) -> int:
-    """min over devices of the most recently durable record's SSN."""
+def compute_rsne(
+    device_records: Sequence[Union[Sequence[LogRecord], ColumnarLog]],
+) -> int:
+    """min over devices of the most recently durable record's SSN.
+
+    Accepts either row-decoded logs (``List[LogRecord]``) or columnar logs.
+    """
     rsne = None
     for recs in device_records:
-        last = recs[-1].ssn if recs else 0
+        if isinstance(recs, ColumnarLog):
+            last = recs.last_ssn
+        else:
+            last = recs[-1].ssn if recs else 0
         rsne = last if rsne is None else min(rsne, last)
     return rsne or 0
 
+
+# --- scalar replay (correctness oracle) --------------------------------------
 
 def _apply(state: RecoveredState, rec: LogRecord, lock: Optional[threading.Lock]) -> None:
     for key, val in rec.writes:
@@ -77,41 +103,13 @@ def _apply(state: RecoveredState, rec: LogRecord, lock: Optional[threading.Lock]
                 state.data[key] = (val, rec.ssn)
 
 
-def recover(
-    devices: Sequence[StorageDevice],
-    checkpoint_dir: Optional[str] = None,
-    parallel: bool = True,
-) -> RecoveredState:
-    """Restore a consistent state from checkpoint files + device logs."""
-    state = RecoveredState()
-
-    # --- stage 1: checkpoint recovery -------------------------------------
-    ckpt: Optional[CheckpointData] = None
-    if checkpoint_dir is not None:
-        ckpt = load_latest_checkpoint(checkpoint_dir, parallel=parallel)
-    if ckpt is not None:
-        state.rsns = ckpt.rsn
-        state.data.update(ckpt.data)
-
-    # --- stage 2: log recovery --------------------------------------------
-    device_records: List[List[LogRecord]] = [[] for _ in devices]
-
-    def _load(i: int) -> None:
-        device_records[i] = decode_records(devices[i].read_all())
-
-    if parallel and len(devices) > 1:
-        threads = [threading.Thread(target=_load, args=(i,)) for i in range(len(devices))]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-    else:
-        for i in range(len(devices)):
-            _load(i)
-
-    rsne = compute_rsne(device_records)
-    state.rsne = rsne
-
+def _replay_scalar(
+    state: RecoveredState,
+    device_records: Sequence[List[LogRecord]],
+    rsne: int,
+    parallel: bool,
+) -> None:
+    """Per-record guarded replay — one thread per device when ``parallel``."""
     lock = threading.Lock() if parallel else None
 
     def _replay(recs: List[LogRecord]) -> Tuple[int, int]:
@@ -128,12 +126,12 @@ def recover(
                 skipped += 1  # durable but provably uncommitted RAW-dependent
         return applied, skipped
 
-    results: List[Tuple[int, int]] = [(0, 0)] * len(devices)
-    if parallel and len(devices) > 1:
+    results: List[Tuple[int, int]] = [(0, 0)] * len(device_records)
+    if parallel and len(device_records) > 1:
         def _worker(i: int) -> None:
             results[i] = _replay(device_records[i])
 
-        threads = [threading.Thread(target=_worker, args=(i,)) for i in range(len(devices))]
+        threads = [threading.Thread(target=_worker, args=(i,)) for i in range(len(device_records))]
         for t in threads:
             t.start()
         for t in threads:
@@ -144,4 +142,304 @@ def recover(
 
     state.n_replayed = sum(r[0] for r in results)
     state.n_skipped_uncommitted = sum(r[1] for r in results)
+
+
+# --- vectorized replay (batched last-writer-wins) ----------------------------
+
+def committed_mask(log: ColumnarLog, rsne: int) -> np.ndarray:
+    """Per-record §5 commit guard: write-only (Qww) records replay whenever
+    durable; HAS_READS (Qwr) records only with ``ssn <= RSNe``."""
+    return ~log.has_reads | (log.ssn <= rsne)
+
+
+def _key_words(key_mat: np.ndarray) -> np.ndarray:
+    """Reinterpret a fixed-width 'S' key array as (n, width/8) int64 words
+    (zero-copy when the width is already a multiple of 8, as the columnar
+    decode guarantees; pads otherwise)."""
+    n = len(key_mat)
+    width = max(key_mat.dtype.itemsize, 1)
+    if width % 8 == 0:
+        return key_mat.view("<i8").reshape(n, width // 8)
+    wpad = -(-width // 8) * 8
+    u8 = np.zeros((n, wpad), np.uint8)
+    u8[:, : key_mat.dtype.itemsize] = key_mat.view(np.uint8).reshape(n, -1)
+    return u8.view("<i8")
+
+
+def _hash_words(words: np.ndarray) -> np.ndarray:
+    """Vectorized 64-bit mixing hash over key words.
+
+    Equal keys always hash equal; the (astronomically rare) converse failure
+    — two distinct keys colliding — is *detected* by the caller's word-level
+    group check and falls back to the exact sort, so the hash only ever
+    affects speed, never results.
+    """
+    mult = np.uint64(0x9E3779B97F4A7C15)        # golden-ratio odd constant
+    acc = np.uint64(0x632BE59BD9B4E019)
+    uw = words.view(np.uint64)
+    with np.errstate(over="ignore"):
+        h = np.full(len(words), np.uint64(0x9AFB33C1), dtype=np.uint64)
+        for j in range(words.shape[1]):
+            acc = acc * mult + np.uint64(1)
+            h += uw[:, j] * (acc | np.uint64(1))
+            h ^= h >> np.uint64(29)
+    return h.view(np.int64)
+
+
+def _group_winners(
+    key_mat: np.ndarray, ssn_arr: np.ndarray, pos_arr: np.ndarray,
+    want_inv: bool = False,
+) -> Tuple[np.ndarray, Optional[np.ndarray], int]:
+    """Segment-sorted last-writer-wins reduction.
+
+    Entries are grouped by exact key identity (the sentinel-terminated
+    fixed-width encoding of :meth:`ColumnarLog.encode_keys_fixed`), and each
+    key segment reduces to the entry with the max SSN — SSN ties going to
+    the *smallest* position, i.e. first in replay order, which reproduces
+    the scalar guard's strict ``>`` (the checkpoint image sits at position
+    -1 and therefore wins its ties).
+
+    Fast path: segments come from a single int64 argsort of a 64-bit key
+    hash, and the (ssn, -pos) argmax per segment from one
+    ``np.maximum.reduceat`` over a packed ``ssn << shift | ~pos`` composite.
+    If the packing ranges don't fit, or the word-level check finds more
+    distinct keys than hash groups (a hash collision), it falls back to one
+    exact multi-column lexsort — identical semantics either way.
+
+    Returns ``(winners, inv, n_groups)``: the winning entry index per group
+    (in group order), each entry's dense group id (``None`` unless
+    ``want_inv`` — only the kernel apply needs it), and the group count.
+    """
+    n = len(key_mat)
+
+    avail = 62 - max(int(ssn_arr.max()), 1).bit_length() if n else 0
+    if n and avail > 1 and int(pos_arr.max()) + 2 < 1 << avail:
+        # composite: bigger SSN sorts higher, then smaller position
+        v = (ssn_arr << avail) + ((1 << avail) - 2 - pos_arr)
+        words = _key_words(key_mat)
+        h = _hash_words(words)
+        order = np.argsort(h)
+        h_s = h[order]
+        gb = np.empty(n, dtype=bool)
+        gb[0] = True
+        np.not_equal(h_s[1:], h_s[:-1], out=gb[1:])
+        # exact word boundaries: a superset of the hash boundaries, strictly
+        # larger only under a hash collision
+        w_s = words[order]
+        exact = np.empty(n, dtype=bool)
+        exact[0] = True
+        np.not_equal(w_s[1:, 0], w_s[:-1, 0], out=exact[1:])
+        for j in range(1, words.shape[1]):
+            exact[1:] |= w_s[1:, j] != w_s[:-1, j]
+        if int(gb.sum()) == int(exact.sum()):
+            gid = np.cumsum(gb) - 1
+            v_s = v[order]
+            seg_max = np.maximum.reduceat(v_s, np.flatnonzero(gb))
+            winners = order[v_s == seg_max[gid]]   # v is unique: one per group
+            inv = None
+            if want_inv:
+                inv = np.empty(n, dtype=np.int64)
+                inv[order] = gid
+            return winners, inv, int(gid[-1]) + 1
+        # hash collision: fall through to the exact sort
+
+    order = np.lexsort((-pos_arr, ssn_arr, key_mat))
+    k_s = key_mat[order]
+    gb = np.empty(n, dtype=bool)
+    gb[0] = True
+    gb[1:] = k_s[1:] != k_s[:-1]
+    gid = np.cumsum(gb) - 1
+    boundary = np.empty(n, dtype=bool)
+    boundary[:-1] = gb[1:]
+    boundary[-1] = True
+    inv = None
+    if want_inv:
+        inv = np.empty(n, dtype=np.int64)
+        inv[order] = gid
+    return order[boundary], inv, int(gid[-1]) + 1
+
+
+def replay_columnar(
+    logs: Sequence[ColumnarLog],
+    rsne: int,
+    base: Optional[Dict[bytes, Tuple[bytes, int]]] = None,
+    use_kernel: bool = False,
+) -> Tuple[Dict[bytes, Tuple[bytes, int]], int, int]:
+    """Batched last-writer-wins replay over columnar device logs.
+
+    ``base`` is the checkpoint image (key -> (value, ssn)); its entries join
+    the reduction at position -1 so they win SSN ties against log writes,
+    exactly like the scalar path's strict ``ssn > image.ssn`` guard.
+
+    With ``use_kernel=True`` the guarded apply against the image runs through
+    the Pallas SSN scatter-max kernel instead of the numpy reduction.
+
+    Returns ``(data, n_replayed, n_skipped_uncommitted)``.
+    """
+    base = base or {}
+    n_replayed = 0
+    n_skipped = 0
+    n_base = len(base)
+
+    # surviving writes, columnar across sources: exact key identity (the
+    # sentinel-terminated fixed-width encoding), SSN, value payload (object
+    # array — only the winners' payloads are ever touched again)
+    base_keys = list(base.keys())
+    key_mats: List[np.ndarray] = [
+        ColumnarLog.encode_keys_fixed(base_keys, [len(k) for k in base_keys])
+    ]
+    ssn_parts: List[np.ndarray] = [
+        np.fromiter((s for _, s in base.values()), dtype=np.int64, count=n_base)
+    ]
+    val_parts: List[np.ndarray] = [
+        np.fromiter((v for v, _ in base.values()), dtype=object, count=n_base)
+    ]
+
+    for log in logs:
+        ok = committed_mask(log, rsne)
+        n_ok = int(np.count_nonzero(ok))
+        n_replayed += n_ok
+        n_skipped += log.n_records - n_ok
+        if not len(log.wr_rec):
+            continue
+        vals = log.values_obj
+        wmask = ok[log.wr_rec]
+        if wmask.all():
+            key_mats.append(log.keys_fixed)
+            ssn_parts.append(log.wr_ssn)
+            val_parts.append(vals)
+        else:
+            key_mats.append(log.keys_fixed[wmask])
+            ssn_parts.append(log.wr_ssn[wmask])
+            val_parts.append(vals[wmask])
+
+    n_total = sum(len(p) for p in ssn_parts)
+    if n_total == 0:
+        return {}, n_replayed, n_skipped
+
+    # common width, kept a multiple of 8 so the int64 word view is zero-copy
+    width = -(-max(1, max(m.dtype.itemsize for m in key_mats)) // 8) * 8
+    key_mat = np.concatenate([m.astype(f"S{width}", copy=False) for m in key_mats])
+    ssn_arr = np.concatenate(ssn_parts)
+    val_arr = np.concatenate(val_parts)
+    pos_arr = np.empty(n_total, dtype=np.int64)
+    pos_arr[:n_base] = -1                       # checkpoint wins SSN ties
+    pos_arr[n_base:] = np.arange(n_total - n_base)
+
+    winners, inv, n_slots = _group_winners(
+        key_mat, ssn_arr, pos_arr, want_inv=use_kernel
+    )
+
+    # 'S' items come back NUL-stripped: dropping the final byte (the \x01
+    # terminator) recovers the exact original key
+    win_keys = key_mat[winners].tolist()
+
+    if use_kernel and n_total > n_base and (
+        int(ssn_arr.max()) >= 2**31 or n_total - n_base >= 2**31
+    ):
+        # outside the kernel's int32 range (checkpoint or log SSNs, or the
+        # write count): the numpy reduction below is equivalent — fall back
+        use_kernel = False
+
+    if not use_kernel or n_total == n_base:
+        data = {}
+        for k, v, s in zip(
+            win_keys, val_arr[winners].tolist(), ssn_arr[winners].tolist()
+        ):
+            data[k[:-1]] = (v, s)
+        return data, n_replayed, n_skipped
+
+    # --- Pallas path: dense key ids + SSN-guarded scatter-max apply ----------
+    from ..kernels.ops import ssn_scatter_max
+    from ..kernels.scatter_max import NO_POS
+
+    image_ssn = np.full(n_slots, -1, np.int32)
+    image_pos = np.full(n_slots, NO_POS, np.int32)
+    base_slots = inv[:n_base]
+    image_ssn[base_slots] = ssn_arr[:n_base]
+    image_pos[base_slots] = -1
+    base_idx_of_slot = np.full(n_slots, -1, np.int64)
+    base_idx_of_slot[base_slots] = np.arange(n_base)
+
+    out_ssn, out_pos = ssn_scatter_max(
+        image_ssn,
+        image_pos,
+        inv[n_base:].astype(np.int32),
+        ssn_arr[n_base:].astype(np.int32),
+        pos_arr[n_base:].astype(np.int32),
+    )
+    out_ssn = np.asarray(out_ssn)
+    out_pos = np.asarray(out_pos)
+
+    # winners[g] is a member of group g: use it for the exact key bytes
+    data = {}
+    for g, (p, s) in enumerate(zip(out_pos.tolist(), out_ssn.tolist())):
+        if p == NO_POS:
+            continue
+        idx = int(base_idx_of_slot[g]) if p < 0 else n_base + p
+        data[win_keys[g][:-1]] = (val_arr[idx], s)
+    return data, n_replayed, n_skipped
+
+
+# --- top-level recovery -------------------------------------------------------
+
+def _load_per_device(devices: Sequence[StorageDevice], decode, parallel: bool) -> List:
+    out: List = [None] * len(devices)
+
+    def _load(i: int) -> None:
+        out[i] = decode(devices[i].read_all())
+
+    if parallel and len(devices) > 1:
+        threads = [threading.Thread(target=_load, args=(i,)) for i in range(len(devices))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    else:
+        for i in range(len(devices)):
+            _load(i)
+    return out
+
+
+def recover(
+    devices: Sequence[StorageDevice],
+    checkpoint_dir: Optional[str] = None,
+    parallel: bool = True,
+    mode: str = "vectorized",
+) -> RecoveredState:
+    """Restore a consistent state from checkpoint files + device logs.
+
+    ``mode`` selects the replay engine: ``"vectorized"`` (default, batched
+    numpy last-writer-wins), ``"pallas"`` (batched + Pallas scatter-max
+    apply), or ``"scalar"`` (the per-record oracle).  All modes are
+    equivalent; ``parallel`` controls per-device decode threading (and, for
+    the scalar mode, per-device replay threading).
+    """
+    if mode not in ("vectorized", "pallas", "scalar"):
+        raise ValueError(f"unknown recovery mode {mode!r}")
+    state = RecoveredState()
+
+    # --- stage 1: checkpoint recovery -------------------------------------
+    ckpt: Optional[CheckpointData] = None
+    if checkpoint_dir is not None:
+        ckpt = load_latest_checkpoint(checkpoint_dir, parallel=parallel)
+    if ckpt is not None:
+        state.rsns = ckpt.rsn
+        state.data.update(ckpt.data)
+
+    # --- stage 2: log recovery --------------------------------------------
+    if mode == "scalar":
+        device_records = _load_per_device(devices, decode_records, parallel)
+        state.rsne = compute_rsne(device_records)
+        _replay_scalar(state, device_records, state.rsne, parallel)
+        return state
+
+    logs: List[ColumnarLog] = _load_per_device(devices, decode_columnar, parallel)
+    state.rsne = compute_rsne(logs)
+    data, n_replayed, n_skipped = replay_columnar(
+        logs, state.rsne, base=state.data or None, use_kernel=(mode == "pallas")
+    )
+    state.data = data
+    state.n_replayed = n_replayed
+    state.n_skipped_uncommitted = n_skipped
     return state

@@ -136,6 +136,8 @@ def make_devices(
 ) -> List[StorageDevice]:
     """Create ``n`` devices of ``kind`` ('ssd' | 'nvm' | 'null')."""
     spec = {"ssd": DeviceSpec.ssd, "nvm": DeviceSpec.nvm, "null": DeviceSpec.null}[kind]()
+    if directory is not None:
+        os.makedirs(directory, exist_ok=True)
     devs = []
     for i in range(n):
         path = os.path.join(directory, f"{prefix}_{i}.bin") if directory else None

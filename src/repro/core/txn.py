@@ -22,7 +22,9 @@ from __future__ import annotations
 import struct
 import zlib
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 FLAG_HAS_READS = 0x01
 
@@ -138,6 +140,191 @@ def decode_records(buf: bytes) -> List[LogRecord]:
         out.append(LogRecord(ssn=ssn, tid=tid, has_reads=bool(flags & FLAG_HAS_READS), writes=writes))
         off = end
     return out
+
+
+@dataclass
+class ColumnarLog:
+    """A decoded device log in columnar (struct-of-arrays) form.
+
+    Per-record columns (length ``n_records``):
+
+    * ``ssn``       — int64, monotone within one device log (flush order);
+    * ``tid``       — int64;
+    * ``has_reads`` — bool; write-only (Qww) records have ``has_reads=False``
+      and may be replayed past RSNe, HAS_READS (Qwr) records may not;
+    * ``n_writes``  — int32 writes carried by each record.
+
+    Per-write columns (length ``n_writes.sum()``), flattened record-major so
+    write ``j`` belongs to record ``wr_rec[j]``:
+
+    * ``wr_rec``  — int64 owning-record index;
+    * ``wr_klen`` — int64 true key length in bytes;
+    * ``keys_fixed`` — the keys in a fixed-width numpy ``'S'`` array holding
+      ``key + b"\\x01"`` NUL-padded to a multiple of 8 (so replay can
+      reinterpret it as int64 words without copying).  The ``\\x01``
+      terminator makes the padded cell an *exact*, self-delimiting key
+      identity — raw NUL padding alone would make ``b"a"`` and ``b"a\\0"``
+      compare equal under 'S' semantics.  Recover the original bytes by
+      stripping trailing NULs and dropping the final byte (decode it with
+      :meth:`fixed_to_key`);
+    * ``keys`` / ``values`` — the raw bytes (variable length, Python lists;
+      replay touches these only to materialize the winning entries).
+
+    This is the decode format of the batched replay path: recovery never
+    materializes per-record Python objects, it reduces these arrays directly
+    (see :func:`repro.core.recovery.replay_columnar`).
+    """
+
+    ssn: np.ndarray
+    tid: np.ndarray
+    has_reads: np.ndarray
+    n_writes: np.ndarray
+    wr_rec: np.ndarray
+    wr_klen: np.ndarray
+    keys_fixed: np.ndarray
+    keys: List[bytes]
+    values: List[bytes]
+    _values_obj: Optional[np.ndarray] = None
+
+    @property
+    def n_records(self) -> int:
+        return len(self.ssn)
+
+    @staticmethod
+    def encode_keys_fixed(keys: Sequence[bytes], klens: Sequence[int]) -> np.ndarray:
+        """Build the sentinel-terminated fixed-width key array (see class
+        docstring) for ``keys`` with known lengths ``klens``."""
+        if not len(keys):
+            return np.empty(0, dtype="S8")
+        width = -(-(max(klens) + 1) // 8) * 8
+        arr = np.asarray(keys, dtype=f"S{width}")
+        u8 = arr.view(np.uint8).reshape(len(arr), width)
+        u8[np.arange(len(arr)), np.asarray(klens)] = 1
+        return arr
+
+    @staticmethod
+    def fixed_to_key(cell: bytes) -> bytes:
+        """Invert the ``keys_fixed`` encoding for one (NUL-stripped) cell."""
+        return cell[:-1]
+
+    @property
+    def values_obj(self) -> np.ndarray:
+        """The values as an object ndarray (cached) — lets replay gather the
+        winning payloads with one fancy-index instead of per-item list ops."""
+        if self._values_obj is None:
+            self._values_obj = np.fromiter(self.values, dtype=object, count=len(self.values))
+        return self._values_obj
+
+    @property
+    def last_ssn(self) -> int:
+        """SSN of the most recently durable record (device DSN frontier)."""
+        return int(self.ssn[-1]) if len(self.ssn) else 0
+
+    @property
+    def wr_ssn(self) -> np.ndarray:
+        """Per-write SSN (gathered from the owning record)."""
+        return self.ssn[self.wr_rec]
+
+    @property
+    def wr_has_reads(self) -> np.ndarray:
+        return self.has_reads[self.wr_rec]
+
+    def to_records(self) -> List[LogRecord]:
+        """Round-trip back to row objects (tests / scalar-oracle interop)."""
+        out: List[LogRecord] = []
+        w = 0
+        for i in range(self.n_records):
+            nw = int(self.n_writes[i])
+            out.append(
+                LogRecord(
+                    ssn=int(self.ssn[i]),
+                    tid=int(self.tid[i]),
+                    has_reads=bool(self.has_reads[i]),
+                    writes=list(zip(self.keys[w : w + nw], self.values[w : w + nw])),
+                )
+            )
+            w += nw
+        return out
+
+
+def decode_columnar(buf: bytes) -> ColumnarLog:
+    """Columnar twin of :func:`decode_records`: one pass over the framed
+    stream, truncating at the first torn or corrupt frame, emitting arrays
+    instead of ``LogRecord`` objects.
+
+    Same validation as the scalar decoder (length + crc32 per frame, bounds
+    checks on every write) so torn-tail semantics are byte-identical.
+    """
+    ssns: List[int] = []
+    tids: List[int] = []
+    flags_l: List[bool] = []
+    nw_l: List[int] = []
+    wr_rec: List[int] = []
+    klens: List[int] = []
+    keys: List[bytes] = []
+    values: List[bytes] = []
+
+    off = 0
+    n = len(buf)
+    rec_i = 0
+    while off + _HDR.size <= n:
+        length, crc = _HDR.unpack_from(buf, off)
+        start = off + _HDR.size
+        end = start + length
+        if end > n:
+            break  # torn tail write
+        payload = buf[start:end]
+        if zlib.crc32(payload) != crc:
+            break
+        ssn, tid, flags, n_writes = _PAYLOAD_FIXED.unpack_from(payload, 0)
+        pos = _PAYLOAD_FIXED.size
+        ok = True
+        wrote = 0
+        for _ in range(n_writes):
+            if pos + 4 > length:
+                ok = False
+                break
+            (klen,) = _U32.unpack_from(payload, pos)
+            pos += 4
+            key = payload[pos : pos + klen]
+            pos += klen
+            if pos + 4 > length:
+                ok = False
+                break
+            (vlen,) = _U32.unpack_from(payload, pos)
+            pos += 4
+            val = payload[pos : pos + vlen]
+            pos += vlen
+            keys.append(key)
+            values.append(val)
+            wr_rec.append(rec_i)
+            klens.append(klen)
+            wrote += 1
+        if not ok:
+            # drop the partial record's writes and stop at the bad frame
+            del keys[len(keys) - wrote :]
+            del values[len(values) - wrote :]
+            del wr_rec[len(wr_rec) - wrote :]
+            del klens[len(klens) - wrote :]
+            break
+        ssns.append(ssn)
+        tids.append(tid)
+        flags_l.append(bool(flags & FLAG_HAS_READS))
+        nw_l.append(n_writes)
+        rec_i += 1
+        off = end
+
+    return ColumnarLog(
+        ssn=np.asarray(ssns, dtype=np.int64),
+        tid=np.asarray(tids, dtype=np.int64),
+        has_reads=np.asarray(flags_l, dtype=bool),
+        n_writes=np.asarray(nw_l, dtype=np.int32),
+        wr_rec=np.asarray(wr_rec, dtype=np.int64),
+        wr_klen=np.asarray(klens, dtype=np.int64),
+        keys_fixed=ColumnarLog.encode_keys_fixed(keys, klens),
+        keys=keys,
+        values=values,
+    )
 
 
 def record_size(n_writes: int, key_bytes: int, val_bytes: int) -> int:

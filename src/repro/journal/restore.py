@@ -13,6 +13,14 @@ Restore pipeline:
 
 Lane count at restore is discovered from the directory, so you can restore
 a 4-lane journal on a host configured with 2 lanes (or vice versa).
+
+The default path decodes lanes columnar (:class:`~repro.core.txn.ColumnarLog`
+— the same decode the vectorized crash recovery uses) and resolves the
+per-slice last-writer-wins with sorted numpy reductions.  Besides skipping
+per-record Python objects, this selects the winning slice *before* decoding
+any array payload, so superseded shard versions are never deserialized —
+the scalar scan (``columnar=False``, kept as the oracle) decodes every
+shard record it visits.
 """
 
 from __future__ import annotations
@@ -26,7 +34,7 @@ import jax
 import numpy as np
 
 from ..core.recovery import compute_rsne
-from ..core.txn import LogRecord, decode_records
+from ..core.txn import ColumnarLog, LogRecord, decode_columnar, decode_records
 from . import records
 
 
@@ -40,13 +48,13 @@ def _lane_files(directory: str) -> List[str]:
     )
 
 
-def load_lanes(directory: str, parallel: bool = True) -> List[List[LogRecord]]:
-    files = _lane_files(directory)
-    out: List[List[LogRecord]] = [[] for _ in files]
+def _load_files(files: List[str], decode, parallel: bool) -> List:
+    """Decode every lane file concurrently with ``decode(bytes)``."""
+    out: List = [None] * len(files)
 
     def _load(i: int) -> None:
         with open(files[i], "rb") as f:
-            out[i] = decode_records(f.read())
+            out[i] = decode(f.read())
 
     if parallel and len(files) > 1:
         ts = [threading.Thread(target=_load, args=(i,)) for i in range(len(files))]
@@ -60,10 +68,109 @@ def load_lanes(directory: str, parallel: bool = True) -> List[List[LogRecord]]:
     return out
 
 
-def restore_latest(
-    directory: str, parallel: bool = True
+def load_lanes(directory: str, parallel: bool = True) -> List[List[LogRecord]]:
+    return _load_files(_lane_files(directory), decode_records, parallel)
+
+
+def load_lanes_columnar(directory: str, parallel: bool = True) -> List[ColumnarLog]:
+    """Columnar twin of :func:`load_lanes` (same decode as crash recovery)."""
+    return _load_files(_lane_files(directory), decode_columnar, parallel)
+
+
+def _restore_latest_columnar(
+    directory: str, parallel: bool
 ) -> Optional[Tuple[int, Dict[str, np.ndarray], dict]]:
-    """Returns (step, {path: array}, metadata) or None if nothing restorable."""
+    lanes = load_lanes_columnar(directory, parallel=parallel)
+    if not lanes:
+        return None
+    rsne = compute_rsne(lanes)
+
+    # flatten lane-major (== the scalar scan order, so SSN ties resolve the
+    # same way: first-seen wins under the strict > guard)
+    keys: List[str] = []
+    vals: List[bytes] = []
+    ssn_parts: List[np.ndarray] = []
+    for lane in lanes:
+        keys.extend(k.decode() for k in lane.keys)
+        vals.extend(lane.values)
+        ssn_parts.append(lane.wr_ssn)
+    n = len(keys)
+    if n == 0:
+        return None
+    ssn = np.concatenate(ssn_parts)
+
+    # parse every key once into parallel columns
+    is_marker = np.zeros(n, bool)
+    valid = np.zeros(n, bool)
+    steps = np.zeros(n, np.int64)
+    slices = np.zeros(n, np.int64)
+    nslices = np.zeros(n, np.int64)
+    path_ids = np.zeros(n, np.int64)
+    path_of_id: List[str] = []
+    pid_lookup: Dict[str, int] = {}
+    for i, k in enumerate(keys):
+        if not k:
+            continue
+        info = records.parse_key(k)
+        valid[i] = True
+        steps[i] = info["step"]
+        if info["kind"] == "marker":
+            is_marker[i] = True
+        else:
+            slices[i] = info["slice"]
+            nslices[i] = info["n_slices"]
+            pid = pid_lookup.setdefault(info["path"], len(path_of_id))
+            if pid == len(path_of_id):
+                path_of_id.append(info["path"])
+            path_ids[i] = pid
+
+    # markers carry RAW deps: only durable-committable ones count
+    mmask = valid & is_marker & (ssn <= rsne)
+    if not mmask.any():
+        return None
+    step = int(steps[mmask].max())
+    cand = np.flatnonzero(mmask & (steps == step))
+    w = int(cand[np.argmax(ssn[cand])])      # max SSN, ties -> first seen
+    meta = json.loads(vals[w].decode()) if vals[w] else {}
+
+    # shard writes are write-only txns (durable => committed): per
+    # (path, slice) segment keep the max-SSN version, ties -> first seen
+    sub = np.flatnonzero(valid & ~is_marker & (steps == step))
+    state: Dict[str, np.ndarray] = {}
+    if sub.size:
+        order = sub[np.lexsort((-sub, ssn[sub], slices[sub], path_ids[sub]))]
+        pid_s = path_ids[order]
+        sl_s = slices[order]
+        boundary = np.empty(order.size, dtype=bool)
+        boundary[:-1] = (pid_s[1:] != pid_s[:-1]) | (sl_s[1:] != sl_s[:-1])
+        boundary[-1] = True
+        winners = order[boundary]            # (pid, slice)-sorted
+        for pid in np.unique(path_ids[winners]):
+            ws = winners[path_ids[winners] == pid]
+            path = path_of_id[int(pid)]
+            n_slices = int(nslices[ws[0]])
+            if ws.size != n_slices:
+                raise RuntimeError(
+                    f"step {step} marker committed but shard {path} has "
+                    f"{ws.size}/{n_slices} slices — journal corruption"
+                )
+            # only the winning slices are ever deserialized
+            parts = [records.decode_array(vals[int(i)]) for i in ws]
+            state[path] = records.join_slices(parts)
+    return step, state, meta
+
+
+def restore_latest(
+    directory: str, parallel: bool = True, columnar: bool = True
+) -> Optional[Tuple[int, Dict[str, np.ndarray], dict]]:
+    """Returns (step, {path: array}, metadata) or None if nothing restorable.
+
+    ``columnar=True`` (default) uses the vectorized lane decode + sorted
+    last-writer-wins; ``columnar=False`` runs the original per-record scan
+    (correctness oracle — both produce identical results).
+    """
+    if columnar:
+        return _restore_latest_columnar(directory, parallel)
     lanes = load_lanes(directory, parallel=parallel)
     if not lanes:
         return None

@@ -1,3 +1,6 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernels for the compute hot-spots, each with an exact oracle in
+# ref.py and a jit'd public wrapper in ops.py (interpret mode off-TPU):
+#   flash_attention.py  — attention (models layer)
+#   ssm_scan.py         — chunked selective scan (models layer)
+#   rwkv6.py            — chunked wkv6 (models layer)
+#   scatter_max.py      — SSN-guarded scatter-max (recovery §5 batch replay)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from .flash_attention import flash_attention_fwd
 from .rwkv6 import rwkv6_chunked
+from .scatter_max import ssn_scatter_max as _ssn_scatter_max_raw
 from .ssm_scan import ssm_scan_chunked
 
 
@@ -50,3 +51,15 @@ def ssm_scan(x, dt, decay, bmat, cmat, *, chunk: int = 64,
 def rwkv6(r, k, v, w, u, *, chunk: int = 32, interpret: Optional[bool] = None):
     """Chunked wkv6: returns (y, final_state)."""
     return rwkv6_chunked(r, k, v, w, u, chunk=chunk, interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_w", "interpret"))
+def ssn_scatter_max(image_ssn, image_pos, key_id, ssn, pos, *,
+                    block_s: int = 128, block_w: int = 128,
+                    interpret: Optional[bool] = None):
+    """SSN-guarded scatter-max batch replay (recovery §5):
+    returns (winning ssn per slot, winning write position per slot)."""
+    return _ssn_scatter_max_raw(
+        image_ssn, image_pos, key_id, ssn, pos,
+        block_s=block_s, block_w=block_w, interpret=_auto_interpret(interpret),
+    )

@@ -1,4 +1,4 @@
-"""Pure-jnp oracles for every Pallas kernel (small-shape exact references)."""
+"""Pure-jnp/numpy oracles for every Pallas kernel (small-shape exact references)."""
 
 from __future__ import annotations
 
@@ -7,6 +7,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def attention_ref(
@@ -37,6 +38,26 @@ def attention_ref(
     scores = jnp.where(mask[None, None], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhst,bhtd->bhsd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def scatter_max_ref(
+    image_ssn: np.ndarray,  # (S,) int, -1 = empty slot
+    image_pos: np.ndarray,  # (S,) int, -1 = checkpoint value
+    key_id: np.ndarray,     # (W,) int
+    ssn: np.ndarray,        # (W,) int
+    pos: np.ndarray,        # (W,) int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Sequential oracle for the SSN-guarded scatter-max: per slot keep the
+    max-SSN write, breaking SSN ties toward the smallest replay position
+    (the checkpoint image sits at pos -1 and so wins its ties — exactly the
+    scalar replay's strict ``ssn > image.ssn`` guard)."""
+    out_ssn = np.array(image_ssn, dtype=np.int64)
+    out_pos = np.array(image_pos, dtype=np.int64)
+    for k, s, p in zip(key_id, ssn, pos):
+        if s > out_ssn[k] or (s == out_ssn[k] and p < out_pos[k]):
+            out_ssn[k] = s
+            out_pos[k] = p
+    return out_ssn.astype(image_ssn.dtype), out_pos.astype(image_pos.dtype)
 
 
 def ssm_scan_ref(

@@ -28,6 +28,8 @@ import traceback
 from typing import Any, Dict, Optional
 
 import jax
+
+from .mesh import mesh_context
 import jax.numpy as jnp
 
 # TPU v5e constants (per chip)
@@ -192,7 +194,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, policy: str,
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_chips = mesh.devices.size
     try:
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             jitted, args = make(mesh)
             t1 = time.time()
             lowered = jitted.lower(*args)

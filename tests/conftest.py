@@ -1,0 +1,42 @@
+"""Shared test fixtures.
+
+The engines default to production timing: a 5 ms group-commit interval, a
+0.2 ms logger idle poll, and *slept* emulated device latencies (storage.py
+``device_clock="real"``).  Tests that spin up threaded engines inherit those
+wall-clock timers, which pushes the full suite past two minutes for no
+coverage gain — the protocol logic is timer-value independent.
+
+The autouse fixture below tightens every ``EngineConfig`` a test constructs
+(unless the test passes those fields explicitly, which keeps timing-specific
+tests honest): virtual device clocks (no sleeping; durability is unchanged —
+the backing file/buffer is still written synchronously) and sub-millisecond
+flush/poll intervals.
+"""
+
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+from repro.core.engine import EngineConfig
+
+# positional index of each tightened field in EngineConfig's __init__
+_FIELD_POS = {f.name: i for i, f in enumerate(dataclasses.fields(EngineConfig))}
+_FAST = {"flush_interval": 5e-4, "device_clock": "virtual", "logger_poll": 1e-5}
+
+
+@pytest.fixture(autouse=True)
+def fast_engine_defaults(monkeypatch):
+    orig_init = EngineConfig.__init__
+
+    def init(self, *args, **kwargs):
+        for name, fast in _FAST.items():
+            if len(args) <= _FIELD_POS[name] and name not in kwargs:
+                kwargs[name] = fast
+        orig_init(self, *args, **kwargs)
+
+    monkeypatch.setattr(EngineConfig, "__init__", init)
+    yield

@@ -12,13 +12,16 @@ SCRIPT = textwrap.dedent("""
     import sys, json
     sys.path.insert(0, "src")
     import jax, jax.numpy as jnp
+    from repro.launch.mesh import mesh_context
     import numpy as np
     from functools import partial
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
     from repro.parallel.compression import compressed_psum
 
-    mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    kw = ({"axis_types": (jax.sharding.AxisType.Auto,)}
+          if hasattr(jax.sharding, "AxisType") else {})
+    mesh = jax.make_mesh((4,), ("data",), **kw)
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(0, 1, (4, 512)), jnp.float32)
 
@@ -27,7 +30,7 @@ SCRIPT = textwrap.dedent("""
     def f(xs):
         return compressed_psum(xs[0], "data")[None]
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         out = jax.jit(f)(x)
     exact = jnp.sum(x, axis=0)
     # every shard holds the same (compressed) sum

@@ -11,8 +11,9 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.ops import flash_attention, rwkv6, ssm_scan
-from repro.kernels.ref import attention_ref, rwkv6_ref, ssm_scan_ref
+from repro.kernels.ops import flash_attention, rwkv6, ssm_scan, ssn_scatter_max
+from repro.kernels.ref import attention_ref, rwkv6_ref, scatter_max_ref, ssm_scan_ref
+from repro.kernels.scatter_max import NO_POS
 
 RNG = np.random.default_rng(42)
 
@@ -103,6 +104,51 @@ def test_rwkv6_strong_decay_stability():
     yr, _ = rwkv6_ref(r, k, v, w, u)
     assert bool(jnp.isfinite(y).all())
     np.testing.assert_allclose(y, yr, atol=1e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize(
+    "n_slots,n_writes,block_s,block_w,ckpt_frac",
+    [
+        (64, 256, 128, 128, 0.0),     # single slot block, padded writes
+        (300, 1000, 128, 256, 0.3),   # unaligned sizes, checkpoint image
+        (1000, 300, 256, 128, 0.9),   # more slots than writes
+        (17, 5, 128, 128, 0.5),       # tiny
+    ],
+)
+def test_ssn_scatter_max_vs_ref(n_slots, n_writes, block_s, block_w, ckpt_frac):
+    """SSN-guarded scatter-max vs the sequential numpy oracle, with duplicate
+    keys, duplicate SSNs (tie -> smallest position), and checkpoint slots
+    that must win their SSN ties (pos -1)."""
+    rng = np.random.default_rng(n_slots * 7 + n_writes)
+    image_ssn = np.full(n_slots, -1, np.int32)
+    image_pos = np.full(n_slots, NO_POS, np.int32)
+    ckpt = rng.random(n_slots) < ckpt_frac
+    image_ssn[ckpt] = rng.integers(0, 50, ckpt.sum())
+    image_pos[ckpt] = -1
+
+    key = rng.integers(0, n_slots, n_writes).astype(np.int32)
+    ssn = rng.integers(0, 60, n_writes).astype(np.int32)   # dense: many ties
+    pos = np.arange(n_writes, dtype=np.int32)
+
+    out_ssn, out_pos = ssn_scatter_max(
+        image_ssn, image_pos, key, ssn, pos,
+        block_s=block_s, block_w=block_w, interpret=True,
+    )
+    ref_ssn, ref_pos = scatter_max_ref(image_ssn, image_pos, key, ssn, pos)
+    np.testing.assert_array_equal(np.asarray(out_ssn), ref_ssn)
+    np.testing.assert_array_equal(np.asarray(out_pos), ref_pos)
+
+
+def test_ssn_scatter_max_empty_writes_is_identity():
+    image_ssn = np.arange(8, dtype=np.int32)
+    image_pos = np.full(8, -1, np.int32)
+    out_ssn, out_pos = ssn_scatter_max(
+        image_ssn, image_pos,
+        np.empty(0, np.int32), np.empty(0, np.int32), np.empty(0, np.int32),
+        interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(out_ssn), image_ssn)
+    np.testing.assert_array_equal(np.asarray(out_pos), image_pos)
 
 
 # --- model-level optimized-impl equivalence (flash vjp, chunked mixers) ------

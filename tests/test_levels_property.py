@@ -4,7 +4,11 @@ invariant under arbitrary txn mixes, flush interleavings and crash points."""
 from typing import Dict, List
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -r requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import EngineConfig, PoplarEngine, Txn, Worker, recover
 from repro.core.levels import (

@@ -13,11 +13,13 @@ SCRIPT = textwrap.dedent("""
     import sys, json
     sys.path.insert(0, "src")
     import jax, jax.numpy as jnp
+    from repro.launch.mesh import mesh_context
     import numpy as np
     from repro.parallel.pipeline import gpipe_apply, sequential_reference
 
-    mesh = jax.make_mesh((4,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    kw = ({"axis_types": (jax.sharding.AxisType.Auto,)}
+          if hasattr(jax.sharding, "AxisType") else {})
+    mesh = jax.make_mesh((4,), ("pod",), **kw)
     S, M, MB, D = 4, 6, 3, 8
     rng = np.random.default_rng(0)
     params = {"w": jnp.asarray(rng.normal(0, 0.5, (S, D, D)), jnp.float32)}
@@ -26,12 +28,12 @@ SCRIPT = textwrap.dedent("""
     def stage_fn(p, x):
         return jnp.tanh(x @ p["w"])
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         out = jax.jit(lambda p, x: gpipe_apply(stage_fn, p, x, mesh))(params, xs)
     ref = sequential_reference(stage_fn, params, xs)
     err = float(jnp.max(jnp.abs(out - ref)))
     # the lowered HLO must contain the expected collective-permutes
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         hlo = jax.jit(lambda p, x: gpipe_apply(stage_fn, p, x, mesh)).lower(params, xs).compile().as_text()
     n_cp = hlo.count("collective-permute(")
     print(json.dumps({"err": err, "n_cp": n_cp}))

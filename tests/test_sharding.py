@@ -82,6 +82,7 @@ SUBPROCESS_TEST = textwrap.dedent("""
     import sys, json
     sys.path.insert(0, "src")
     import jax, jax.numpy as jnp
+    from repro.launch.mesh import mesh_context
     import numpy as np
     from repro.configs.base import reduced, ShapeConfig
     from repro.configs.registry import get_config, make_inputs
@@ -115,7 +116,7 @@ SUBPROCESS_TEST = textwrap.dedent("""
 
     jitted = jax.jit(wrapped, in_shardings=(param_sh, opt_sh, batch_sh),
                      out_shardings=(param_sh, opt_sh, {"grad_norm": rep, "lr": rep, "loss": rep}))
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         p1, o1, m1 = jitted(params, opt, batch)
         p2, o2, m2 = jitted(p1, o1, batch)
     # compare against single-device execution
