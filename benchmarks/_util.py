@@ -13,6 +13,7 @@ paper measures; thread counts are scaled down vs the paper's 20-core Xeon
 
 from __future__ import annotations
 
+import json
 import os
 import statistics
 import sys
@@ -183,6 +184,104 @@ def run_bench(
     )
 
 
+def run_batch_bench(
+    n_workers: int = 4,
+    n_devices: int = 2,
+    device_kind: str = "ssd",
+    duration: float = DURATION,
+    batch_size: int = 2048,
+    mode: str = "vectorized",
+    workload: str = "ycsb_write",
+    n_records: int = 20_000,
+    max_rounds: int = 2,
+) -> BenchResult:
+    """Drive the batched array-native forward path (`repro.db.batch.BatchOCC`)
+    for ``duration`` seconds: one Python thread generating ``batch_size``-txn
+    batches, executed with vectorized OCC + bulk SSN reservation + batch
+    encode against ``n_workers`` tid/buffer stripes — the apples-to-apples
+    comparator for ``run_bench('poplar', ...)`` at the same worker count."""
+    from repro.db import ArrayTable, BatchOCC
+    from repro.db import ycsb
+
+    table = ArrayTable(capacity=n_records)
+    ycsb.load(table, n_records)
+    indexed = False
+    if workload == "ycsb_write":
+        wl = ycsb.YCSBWriteOnly(n_records, seed=1)
+        # rows equal key indices after load(): take the array-native entry
+        indexed = table.row_of(ycsb.key_of(0)) == 0
+    elif workload == "ycsb_hybrid":
+        wl = ycsb.YCSBHybrid(n_records, seed=1)
+    else:
+        raise KeyError(workload)
+    engine = make_engine("poplar", n_devices, device_kind, n_workers)
+    engine.start()
+    occ = BatchOCC(table, engine, n_workers=n_workers, mode=mode)
+
+    n_committed = 0
+    lat: List[float] = []
+    pending: List = []  # pre-committed txns whose durable commit is in flight
+
+    def sweep() -> None:
+        nonlocal n_committed
+        keep = []
+        for t in pending:
+            if t.committed:
+                n_committed += 1
+                if len(lat) < 200000:
+                    lat.append((t.t_commit - t.t_precommit) * 1e3)
+            else:
+                keep.append(t)
+        pending[:] = keep
+
+    def one_batch() -> "object":
+        if indexed:
+            rd, rs, wr, ws, vals, vlen = wl.next_batch_indexed(batch_size)
+            return occ.execute_indexed(rd, rs, wr, ws, vals, wr_vlen=vlen,
+                                       max_rounds=max_rounds)
+        return occ.execute_batch(wl.next_batch(batch_size),
+                                 max_rounds=max_rounds)
+
+    submitted = 0
+    # one warm-up batch outside the timed window (first-touch numpy/alloc
+    # costs; the scalar comparator's thread-start is likewise pre-timing)
+    occ.execute_batch(wl.next_batch(min(64, batch_size)), max_rounds=1)
+    occ.drain()
+    import gc
+
+    gc.collect()
+    t_start = time.perf_counter()
+    deadline = t_start + duration
+    while time.perf_counter() < deadline:
+        submitted += batch_size
+        res = one_batch()
+        pending.extend(res.committed)
+        occ.drain()
+        # release committed txns (and their payload bytes) promptly: keeps
+        # the GC working set flat instead of growing with throughput
+        sweep()
+    try:
+        engine.quiesce(range(n_workers), timeout=30)
+    except TimeoutError:
+        pass
+    elapsed = time.perf_counter() - t_start
+    engine.stop()
+    sweep()
+
+    return BenchResult(
+        engine=f"poplar_batch[{mode}]",
+        workload=workload,
+        n_workers=n_workers,
+        n_devices=n_devices,
+        duration_s=elapsed,
+        committed=n_committed,
+        submitted=submitted,
+        aborts=occ.aborts,
+        latencies_ms=lat,
+        device_stats=[d.stats() for d in engine.devices],
+    )
+
+
 # --- workload factories -----------------------------------------------------------
 
 def ycsb_write_factory(n_records: int = 20_000):
@@ -221,7 +320,27 @@ def tpcc_factory(warehouses: int = 8):
     return load, make
 
 
-def emit(rows: Sequence[Dict], header: Sequence[str]) -> None:
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+_JSON_ACC: Dict[str, List[Dict]] = {}
+
+
+def emit(rows: Sequence[Dict], header: Sequence[str], name: Optional[str] = None,
+         append: bool = False) -> None:
+    """Print a CSV block; with ``name``, also persist the rows to
+    ``BENCH_<name>.json`` at the repo root so the perf trajectory is
+    machine-readable across PRs.  A plain emit resets the file's rows (so a
+    re-invoked ``run()`` never duplicates); a benchmark emitting several
+    sub-tables passes ``append=True`` on the later calls (table23)."""
     print(",".join(header))
     for r in rows:
         print(",".join(str(r.get(h, "")) for h in header))
+    if name is None:
+        return
+    acc = _JSON_ACC.setdefault(name, [])
+    if not append:
+        acc.clear()
+    acc.extend(dict(r) for r in rows)
+    path = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": name, "fast": FAST, "rows": acc}, f, indent=1)
+        f.write("\n")

@@ -22,7 +22,7 @@ def run(duration=None):
                 "txn_per_s": round(r.txn_per_s, 1),
                 "avg_latency_ms": round(r.avg_latency_ms, 3),
             })
-    emit(rows, ["bench", "engine", "scan_length", "txn_per_s", "avg_latency_ms"])
+    emit(rows, ["bench", "engine", "scan_length", "txn_per_s", "avg_latency_ms"], name="fig10")
     return rows
 
 

@@ -2,13 +2,23 @@
 
 Expectation (paper): POPLAR ≈ SILO > CENTR (IO-bound on one device);
 NVM-D far below on SSDs (synchronous unbatched per-txn writes).
+
+The ``poplar_batch`` rows drive the same Poplar engine through the batched
+array-native forward path (`repro.db.batch.BatchOCC`: vectorized OCC +
+bulk ``reserve_batch`` SSN allocation + batch record encode) at matched
+worker counts — the acceptance target is ≥3x the scalar OCC path on YCSB
+write-only.
 """
-from _util import THREADS, emit, run_bench, tpcc_factory, ycsb_write_factory
+import statistics
+
+from _util import (DURATION, THREADS, emit, run_batch_bench, run_bench,
+                   tpcc_factory, ycsb_write_factory)
 
 ENGINES = ("centr", "silo", "nvmd", "poplar")
 
 
 def run(duration=None):
+    dur = {"duration": duration} if duration else {}
     rows = []
     for wl_name, (load, make) in (
         ("ycsb_write", ycsb_write_factory()),
@@ -17,14 +27,42 @@ def run(duration=None):
         for engine in ENGINES:
             for n in THREADS:
                 r = run_bench(engine, make, load, n_workers=n, n_devices=2,
-                              workload_name=wl_name,
-                              **({"duration": duration} if duration else {}))
+                              workload_name=wl_name, **dur)
                 rows.append({
                     "bench": "fig5", "workload": wl_name, "engine": engine,
                     "threads": n, "txn_per_s": round(r.txn_per_s, 1),
                     "committed": r.committed, "aborts": r.aborts,
                 })
-    emit(rows, ["bench", "workload", "engine", "threads", "txn_per_s", "committed", "aborts"])
+    # batched forward path vs the scalar OCC path: matched pairs per worker
+    # count.  The shared 1-core container has multi-second host-steal
+    # episodes (a fixed CPU workload varies >5x between runs), so a single
+    # draw per config is meaningless — each side is the median of several
+    # short interleaved trials spread across the episode timescale.
+    load, make = ycsb_write_factory()
+    trials = 3
+    pair_duration = duration or max(DURATION, 1.5)
+    for n in THREADS:
+        s_rates, b_results = [], []
+        for _ in range(trials):
+            s = run_bench("poplar", make, load, n_workers=n, n_devices=2,
+                          workload_name="ycsb_write", duration=pair_duration)
+            b = run_batch_bench(n_workers=n, n_devices=2, workload="ycsb_write",
+                                duration=pair_duration)
+            s_rates.append(s.txn_per_s)
+            b_results.append(b)
+        s_med = statistics.median(s_rates)
+        b = sorted(b_results, key=lambda r: r.txn_per_s)[trials // 2]
+        rows.append({
+            "bench": "fig5_batch", "workload": "ycsb_write",
+            "engine": "poplar_batch", "threads": n,
+            "txn_per_s": round(b.txn_per_s, 1), "committed": b.committed,
+            "aborts": b.aborts,
+            "scalar_txn_per_s": round(s_med, 1),
+            "speedup_vs_scalar_occ": round(b.txn_per_s / max(s_med, 1e-9), 2),
+        })
+    emit(rows, ["bench", "workload", "engine", "threads", "txn_per_s",
+                "committed", "aborts", "scalar_txn_per_s",
+                "speedup_vs_scalar_occ"], name="fig5")
     return rows
 
 

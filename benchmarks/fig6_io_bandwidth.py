@@ -25,7 +25,7 @@ def run(duration=None):
                     "utilization": round(util, 3),
                     "avg_write_KB": round(d["avg_write_bytes"] / 1e3, 2),
                 })
-    emit(rows, ["bench", "workload", "engine", "device", "MB_per_s", "utilization", "avg_write_KB"])
+    emit(rows, ["bench", "workload", "engine", "device", "MB_per_s", "utilization", "avg_write_KB"], name="fig6")
     return rows
 
 

@@ -24,7 +24,7 @@ def run(duration=None):
                     "avg_latency_ms": round(r.avg_latency_ms, 3),
                     "p50_latency_ms": round(r.p50_latency_ms, 3),
                 })
-    emit(rows, ["bench", "workload", "engine", "threads", "avg_latency_ms", "p50_latency_ms"])
+    emit(rows, ["bench", "workload", "engine", "threads", "avg_latency_ms", "p50_latency_ms"], name="fig7")
     return rows
 
 

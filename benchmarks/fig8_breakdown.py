@@ -25,7 +25,7 @@ def run(duration=None):
                 "other_pct": round(100 * r.breakdown["other"] / total, 2),
             })
     emit(rows, ["bench", "workload", "engine", "threads",
-                "log_contention_pct", "log_work_pct", "other_pct"])
+                "log_contention_pct", "log_work_pct", "other_pct"], name="fig8")
     return rows
 
 

@@ -22,7 +22,7 @@ def run(duration=None):
                     "bench": "fig9", "workload": wl_name, "engine": engine,
                     "devices": nd, "txn_per_s": round(r.txn_per_s, 1),
                 })
-    emit(rows, ["bench", "workload", "engine", "devices", "txn_per_s"])
+    emit(rows, ["bench", "workload", "engine", "devices", "txn_per_s"], name="fig9")
     return rows
 
 

@@ -77,6 +77,12 @@ def run(duration=None):
             if rf["step_s_lower_bound"] else 0,
             "peak_gb": r["memory"]["peak_gb"],
         })
+    if out:
+        from _util import emit
+
+        emit(out, ["bench", "arch", "shape", "mesh", "tag", "bottleneck",
+                   "step_lower_bound_s", "compute_fraction", "peak_gb"],
+             name="roofline")
     return out
 
 

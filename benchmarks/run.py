@@ -1,7 +1,13 @@
 """Benchmark driver — one function per paper table/figure.
 
 Prints CSV blocks per benchmark (name,metrics...) plus the roofline table
-derived from the dry-run artifacts.  BENCH_FAST=1 shrinks durations for CI.
+derived from the dry-run artifacts, and persists each benchmark's rows to
+``BENCH_<name>.json`` at the repo root (machine-readable perf trajectory
+across PRs).  BENCH_FAST=1 shrinks durations for CI.
+
+Usage: ``python benchmarks/run.py [bench_name ...]`` — with arguments, only
+the named benchmarks run (e.g. ``fig5_throughput table23_recovery`` for the
+CI smoke subset).
 """
 
 import os
@@ -12,7 +18,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
-def main() -> None:
+def main(only=None) -> None:
     import fig5_throughput
     import fig6_io_bandwidth
     import fig7_commit_latency
@@ -32,6 +38,12 @@ def main() -> None:
         ("table23_recovery", table23_recovery.run),
         ("roofline", roofline.run),
     ]
+    if only:
+        unknown = set(only) - {n for n, _ in benches}
+        if unknown:
+            raise SystemExit(f"unknown benchmarks: {sorted(unknown)}; "
+                             f"available: {[n for n, _ in benches]}")
+        benches = [(n, fn) for n, fn in benches if n in set(only)]
     for name, fn in benches:
         t0 = time.perf_counter()
         print(f"\n### {name}")
@@ -40,4 +52,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -236,15 +236,16 @@ def run(duration=None):
             shutil.rmtree(tmp, ignore_errors=True)
     emit(rows, ["bench", "engine", "devices", "log_MB", "ckpt_MB",
                 "ckpt_recovery_s", "log_recovery_s", "wall_replay_s",
-                "recovered_keys", "rsne"])
+                "recovered_keys", "rsne"], name="table23")
 
     replay_rows = [_bench_replay(nd, REPLAY_RECORDS) for nd in (1, 2, 4, 8)]
     emit(replay_rows, ["bench", "devices", "n_records", "n_skipped",
                        "scalar_decode_s", "vec_decode_s", "scalar_replay_s",
                        "scalar_threaded_s", "vec_replay_s", "scalar_rec_per_s",
-                       "vec_rec_per_s", "speedup", "speedup_vs_threaded"])
+                       "vec_rec_per_s", "speedup", "speedup_vs_threaded"],
+         name="table23", append=True)
     kernel_row = _bench_replay_kernel()
-    emit([kernel_row], ["bench", "devices", "n_records", "kernel_replay_s", "agrees"])
+    emit([kernel_row], ["bench", "devices", "n_records", "kernel_replay_s", "agrees"], name="table23", append=True)
     return rows + replay_rows + [kernel_row]
 
 

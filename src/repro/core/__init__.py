@@ -16,7 +16,14 @@ from .variants import CentrEngine, NvmDEngine, SiloEngine
 from .recovery import RecoveredState, recover, replay_columnar
 from .checkpoint import CheckpointDaemon, load_latest_checkpoint
 from .storage import DeviceSpec, StorageDevice, make_devices
-from .txn import Txn, LogRecord, ColumnarLog, decode_records, decode_columnar
+from .txn import (
+    Txn,
+    LogRecord,
+    ColumnarLog,
+    decode_records,
+    decode_columnar,
+    encode_batch,
+)
 
 __all__ = [
     "EngineConfig",
@@ -39,4 +46,5 @@ __all__ = [
     "ColumnarLog",
     "decode_records",
     "decode_columnar",
+    "encode_batch",
 ]

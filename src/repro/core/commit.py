@@ -19,7 +19,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
-from typing import Callable, Deque, List, Optional
+from typing import Callable, Deque, List, Optional, Sequence
 
 from .log_buffer import LogBuffer
 from .txn import Txn
@@ -42,6 +42,18 @@ class CommitQueues:
                 self.qww.append(txn)
             else:
                 self.qwr.append(txn)
+
+    def push_batch(self, txns: Sequence[Txn]) -> None:
+        """Enqueue a batch under one lock acquisition (batched forward path).
+        ``txns`` must be in SSN order per queue, which holds for any slice of
+        a batch allocated through ``reserve_batch`` (SSNs are monotone in
+        batch order per buffer)."""
+        with self.lock:
+            for txn in txns:
+                if txn.write_only:
+                    self.qww.append(txn)
+                else:
+                    self.qwr.append(txn)
 
     def pending(self) -> int:
         with self.lock:

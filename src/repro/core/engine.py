@@ -154,6 +154,41 @@ class PoplarEngine(LoggingEngine):
             self.txn_logged += 1
         q.push(txn)
 
+    def publish_batch(
+        self,
+        txns: Sequence[Txn],
+        blob: bytes = b"",
+        buffer_id: int = -1,
+        offset: int = 0,
+        seg_idx: int = -1,
+    ) -> None:
+        """Batch twin of :meth:`publish` for the array-native forward path.
+
+        ``txns`` is one batch slice whose write records were reserved
+        contiguously on buffer ``buffer_id`` via
+        :meth:`~repro.core.log_buffer.LogBuffer.reserve_batch` and
+        pre-encoded (``core.txn.encode_batch``) into ``blob``; the region is
+        completed with a single ring memcpy.  Read-only transactions (no
+        blob) ride along and are only enqueued.  Commit-queue pushes are
+        grouped per worker (one lock acquisition each).
+        """
+        if blob:
+            self.buffers[buffer_id].fill(offset, seg_idx, blob)
+        now = time.perf_counter()
+        by_worker: Dict[int, List[Txn]] = {}
+        for t in txns:
+            t.t_precommit = now
+            w = getattr(t, "worker_id", None)
+            # no tid fallback here (unlike publish()): striped tids are
+            # never registered worker ids, so failing fast beats a KeyError
+            # deep inside the commit queues
+            assert w is not None, "publish_batch requires txn.worker_id"
+            by_worker.setdefault(w, []).append(t)
+        for w, group in by_worker.items():
+            self.queues[w].push_batch(group)
+        with self._count_lock:
+            self.txn_logged += len(txns)
+
     def drain(self, worker_id: int) -> int:
         # On NVM-class devices (sub-5us persist) a worker flushes its own
         # buffer inline before draining: the IO is cheaper than waiting for

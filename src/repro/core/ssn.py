@@ -22,6 +22,8 @@ from __future__ import annotations
 
 from typing import Iterable, Optional, Tuple
 
+import numpy as np
+
 from .log_buffer import LogBuffer
 
 
@@ -66,3 +68,56 @@ def writeback(ssn: int, write_items: Iterable) -> None:
     written tuple."""
     for e in write_items:
         e.ssn = ssn
+
+
+# --- batched Algorithm 1 (array-native forward path) -------------------------
+
+def base_ssn_batch(acc_ssn: np.ndarray, acc_start: np.ndarray) -> np.ndarray:
+    """Batched Algorithm 1 lines 1–4: per-transaction base SSN.
+
+    ``acc_ssn`` holds the tuple SSNs of every access (RS ∪ WS), flattened
+    transaction-major; ``acc_start`` is the ``(B+1,)`` prefix of per-txn
+    access counts.  Returns the ``(B,)`` segment max (0 for a transaction
+    with no accesses), i.e. ``base_i = max_{e ∈ RS_i ∪ WS_i} e.ssn``.
+    """
+    b = len(acc_start) - 1
+    out = np.zeros(b, dtype=np.int64)
+    nonempty = acc_start[:-1] < acc_start[1:]
+    if acc_ssn.size and nonempty.any():
+        # reduceat over only the nonempty segment starts: an empty segment
+        # contributes no elements between two consecutive nonempty starts,
+        # so the filtered boundaries still delimit the right slices
+        out[nonempty] = np.maximum.reduceat(
+            np.asarray(acc_ssn, dtype=np.int64), acc_start[:-1][nonempty]
+        )
+    return out
+
+
+def chain_ssns(buffer_ssn: int, bases: np.ndarray) -> np.ndarray:
+    """Vectorized Algorithm 1 lines 6–9 for a whole batch on one buffer.
+
+    The scalar recurrence is ``s_i = max(base_i, s_{i-1}) + 1`` seeded with
+    the buffer SSN; expanding it gives the closed form
+
+        ``s_i = i + 1 + max(L.ssn, max_{j<=i} (base_j - j))``
+
+    which is one subtraction, one running max, and one add — no serial loop.
+    The caller stores ``s[-1]`` back into the buffer (done by
+    :meth:`~repro.core.log_buffer.LogBuffer.reserve_batch` under its latch).
+    """
+    bases = np.asarray(bases, dtype=np.int64)
+    idx = np.arange(len(bases), dtype=np.int64)
+    return idx + 1 + np.maximum(int(buffer_ssn), np.maximum.accumulate(bases - idx))
+
+
+def allocate_batch(
+    buffer: LogBuffer, bases: np.ndarray, lengths: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Batched Algorithm 1 for write transactions mapped to one buffer.
+
+    One latch acquisition reserves SSNs and slots for the whole batch
+    (replacing N :func:`allocate` round-trips); returns ``(ssns, offsets,
+    segment_index)``.  Read-only transactions never reach here — their SSN
+    is just :func:`base_ssn_batch`'s output (Algorithm 1 lines 16–17).
+    """
+    return buffer.reserve_batch(bases, lengths)

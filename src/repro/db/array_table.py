@@ -1,0 +1,181 @@
+"""Dense columnar tuple store — the array-native twin of :class:`Table`.
+
+Where :class:`~repro.db.table.Table` keeps one :class:`TupleCell` object per
+key (with a per-tuple ``threading.Lock``), ``ArrayTable`` holds the same
+state as struct-of-arrays over dense integer rows:
+
+* ``ssn``        — int64 per-tuple sequence numbers (Algorithm 1 state);
+* ``lock_owner`` — int64 write-lock owner tids (0 = free), maintained
+  vectorized so batch validation can test/claim whole index arrays;
+* ``values``     — object array of value bytes.
+
+A ``key -> row`` dict maps the flat key space onto rows; rows are append
+-only and never reused, so an index array gathered once stays valid for the
+life of the table.  This is the substrate of the batched OCC executor
+(`repro.db.batch`): validation, SSN base computation, and write-back are
+all gathers/scatters over these columns — the per-tuple lock round-trips of
+the scalar path collapse into a handful of array ops under one mutex.
+
+The layout deliberately mirrors the columnar *log* layout
+(:class:`~repro.core.txn.ColumnarLog`) that recovery decodes: the same
+(key, value, ssn) triple flows from execution through logging to replay
+without leaving array form.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .table import Table
+
+
+class ArrayTable:
+    """A flat key space over dense columnar rows (batched forward path)."""
+
+    def __init__(self, capacity: int = 1024, name: str = "main"):
+        self.name = name
+        capacity = max(capacity, 1)
+        self._index: Dict[str, int] = {}
+        self._keys: List[str] = []
+        self._keys_b: List[bytes] = []   # encoded key bytes (log framing)
+        self.ssn = np.zeros(capacity, dtype=np.int64)
+        self.lock_owner = np.zeros(capacity, dtype=np.int64)
+        self.key_len = np.zeros(capacity, dtype=np.int64)  # len(encoded key)
+        self.values = np.empty(capacity, dtype=object)
+        # one mutex guards structural growth and the vectorized
+        # claim/apply/release critical sections of the batch executor
+        self.mutex = threading.Lock()
+
+    # --- rows ----------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return len(self._keys)
+
+    def __len__(self) -> int:
+        return len(self._keys)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._index
+
+    def _grow(self, need: int) -> None:
+        cap = len(self.ssn)
+        if need <= cap:
+            return
+        new_cap = max(need, cap * 2)
+        for name in ("ssn", "lock_owner", "key_len", "values"):
+            old = getattr(self, name)
+            arr = np.zeros(new_cap, old.dtype) if old.dtype != object else np.empty(new_cap, object)
+            arr[:cap] = old
+            setattr(self, name, arr)
+
+    def insert(self, key: str, value: bytes) -> int:
+        """Upsert one key; returns its row (``Table.insert`` duck-type, so
+        the YCSB/TPC-C loaders work unchanged against either store)."""
+        with self.mutex:
+            row = self._index.get(key)
+            if row is None:
+                row = self._insert_locked(key)
+            self.values[row] = value
+            return row
+
+    def _insert_locked(self, key: str) -> int:
+        row = len(self._keys)
+        self._grow(row + 1)
+        self._index[key] = row
+        self._keys.append(key)
+        kb = key.encode()
+        self._keys_b.append(kb)
+        self.key_len[row] = len(kb)
+        self.values[row] = b""
+        return row
+
+    def rows_for(self, keys: Sequence[str]) -> np.ndarray:
+        """Map keys to rows, inserting missing ones (batched
+        ``get_or_insert``).  Returns an int64 index array."""
+        index = self._index
+        out = np.empty(len(keys), dtype=np.int64)
+        missing: List[Tuple[int, str]] = []
+        for i, k in enumerate(keys):
+            row = index.get(k)
+            if row is None:
+                missing.append((i, k))
+                out[i] = -1
+            else:
+                out[i] = row
+        if missing:
+            with self.mutex:
+                for i, k in missing:
+                    row = index.get(k)
+                    out[i] = self._insert_locked(k) if row is None else row
+        return out
+
+    def row_of(self, key: str) -> Optional[int]:
+        return self._index.get(key)
+
+    def key_of(self, row: int) -> str:
+        return self._keys[row]
+
+    def key_bytes_for(self, rows: Sequence[int]) -> List[bytes]:
+        """Encoded key bytes for ``rows`` (log-record framing: the indexed
+        batch pipeline encodes keys straight from this column)."""
+        kb = self._keys_b
+        return [kb[r] for r in rows]
+
+    # --- point access (tests / drivers) -------------------------------------
+    def get(self, key: str) -> Optional[Tuple[bytes, int]]:
+        """(value, ssn) of ``key``, or None — the batch drivers' read hook."""
+        row = self._index.get(key)
+        if row is None:
+            return None
+        return self.values[row], int(self.ssn[row])
+
+    def get_or_insert(self, key: str) -> Tuple[bytes, int]:
+        row = self._index.get(key)
+        if row is None:
+            with self.mutex:
+                row = self._index.get(key)
+                if row is None:
+                    row = self._insert_locked(key)
+        return self.values[row], int(self.ssn[row])
+
+    # --- vectorized locks (batch validation) ---------------------------------
+    def locked_rows(self, rows: np.ndarray, owner: int = 0) -> np.ndarray:
+        """Boolean mask of ``rows`` held by a *different* owner."""
+        held = self.lock_owner[rows]
+        return (held != 0) & (held != owner)
+
+    def claim_rows(self, rows: np.ndarray, owner) -> None:
+        """Take the write locks for ``rows`` — ``owner`` is a tid or a
+        per-row tid array (caller holds :attr:`mutex` and has verified the
+        rows free via :meth:`locked_rows`)."""
+        self.lock_owner[rows] = owner
+
+    def release_rows(self, rows: np.ndarray) -> None:
+        self.lock_owner[rows] = 0
+
+    # --- interop ------------------------------------------------------------
+    @classmethod
+    def from_table(cls, table: Table) -> "ArrayTable":
+        """Columnarize a dict :class:`Table` (cells copied, locks reset)."""
+        out = cls(capacity=max(len(table), 1), name=table.name)
+        for key in table.sorted_keys():
+            cell = table.get(key)
+            row = out._insert_locked(key)
+            out.values[row] = cell.value
+            out.ssn[row] = cell.ssn
+        return out
+
+    def items(self) -> Iterator[Tuple[str, bytes, int]]:
+        for key, row in self._index.items():
+            yield key, self.values[row], int(self.ssn[row])
+
+    def to_dict(self) -> Dict[bytes, Tuple[bytes, int]]:
+        """``key_bytes -> (value, ssn)`` — the :class:`RecoveredState.data`
+        shape, for direct comparison against a post-crash recovery."""
+        return {
+            key.encode(): (self.values[row], int(self.ssn[row]))
+            for key, row in self._index.items()
+        }

@@ -20,32 +20,56 @@ engine's commit protocol drains it) or None if aborted.
 
 from __future__ import annotations
 
-import itertools
-import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from ..core import ssn as ssn_mod
 from ..core.engine import LoggingEngine
 from ..core.txn import Txn
 from .table import Table, TupleCell
 
-_tid_counter = itertools.count(1)
-_tid_lock = threading.Lock()
+# default tid stripe width: tids are striped ``worker_id + 1 + k * stride``,
+# so allocation is lock-free per worker and globally collision-free for any
+# worker count below the stride — the global next_tid() lock of the original
+# implementation would otherwise serialize the batched path
+TID_STRIDE = 1024
 
 
-def next_tid() -> int:
-    with _tid_lock:
-        return next(_tid_counter)
+class TidStripe:
+    """Lock-free per-worker transaction-id allocation.
+
+    Worker ``w`` draws from the arithmetic progression ``w + 1 + k*stride``
+    (tid 0 is reserved for engine-internal records, e.g. heartbeats), so no
+    two workers under the same stride can ever collide and no cross-worker
+    lock is needed."""
+
+    __slots__ = ("_next", "stride")
+
+    def __init__(self, worker_id: int, stride: int = TID_STRIDE):
+        assert 0 <= worker_id < stride, f"worker_id {worker_id} >= stride {stride}"
+        self._next = worker_id + 1
+        self.stride = stride
+
+    def next(self) -> int:
+        tid = self._next
+        self._next += self.stride
+        return tid
 
 
 class OCCWorker:
     """One worker thread's OCC execution context."""
 
-    def __init__(self, table: Table, engine: LoggingEngine, worker_id: int):
+    def __init__(
+        self,
+        table: Table,
+        engine: LoggingEngine,
+        worker_id: int,
+        tid_stride: int = TID_STRIDE,
+    ):
         self.table = table
         self.engine = engine
         self.worker_id = worker_id
+        self.tids = TidStripe(worker_id, tid_stride)
         engine.register_worker(worker_id)
         self.committed_submitted = 0
         self.aborts = 0
@@ -58,7 +82,7 @@ class OCCWorker:
         scans: Sequence[Tuple[str, int]] = (),
     ) -> Optional[Txn]:
         """Run one transaction; returns the pre-committed Txn or None on abort."""
-        tid = next_tid()
+        tid = self.tids.next()
         txn = Txn(tid=tid)
         txn.worker_id = self.worker_id  # type: ignore[attr-defined]
         txn.t_start = time.perf_counter()

@@ -9,6 +9,7 @@ primary-key-ordered locking of §4.4.
 
 from __future__ import annotations
 
+import bisect
 import threading
 from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
@@ -43,7 +44,17 @@ class TupleCell:
 
 
 class Table:
-    """A flat key space of tuple cells (composite keys encode TPC-C tables)."""
+    """A flat key space of tuple cells (composite keys encode TPC-C tables).
+
+    Sorted-key cache behaviour: :meth:`sorted_keys` materializes the sorted
+    key list lazily and caches it; any :meth:`insert` of a *new* key
+    invalidates the cache (value updates of existing keys do not), so range
+    scans and checkpoint partitioning pay the sort only after the key space
+    actually changes.  Under insert-heavy workloads interleaved with scans
+    this re-sorts per new key — an index (e.g. a B-tree) would amortize
+    that; for the fixed-format benchmark key spaces here the key set is
+    static after load.
+    """
 
     def __init__(self, name: str = "main"):
         self.name = name
@@ -105,7 +116,5 @@ class Table:
         # note: for benchmark purposes keys are fixed-format so lexicographic
         # order == logical order; a real system would use an index.
         keys = self.sorted_keys()
-        import bisect
-
         i = bisect.bisect_left(keys, start_key)
         return [self._cells[k] for k in keys[i : i + length]]

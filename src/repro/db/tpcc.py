@@ -21,10 +21,16 @@ from __future__ import annotations
 
 import random
 import struct
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
+from .batch import TxnSpec
 from .occ import OCCWorker
 from .table import Table
+
+# value-lookup hook for spec generation: key -> (value bytes, observed ssn).
+# The dict-table adapter wraps TupleCell; ArrayTable.get_or_insert already
+# has this exact signature, so batch generation runs against either store.
+Lookup = Callable[[str], Tuple[bytes, int]]
 
 DISTRICTS = 10
 CUSTOMERS = 120        # per district (paper: 3000; scaled)
@@ -60,12 +66,31 @@ class TPCC:
         self.rng = random.Random(seed)
         self._order_seq = 0
 
-    def next_txn(self, worker: OCCWorker):
-        if self.rng.random() < 0.5:
-            return self._payment(worker)
-        return self._new_order(worker)
+    def _dict_lookup(self, key: str) -> Tuple[bytes, int]:
+        cell = self.table.get_or_insert(key)
+        return cell.value, cell.ssn
 
-    def _payment(self, worker: OCCWorker):
+    def next_txn(self, worker: OCCWorker):
+        spec = self.next_spec(self._dict_lookup)
+        return worker.execute(reads=spec.reads, writes=spec.writes)
+
+    def next_spec(self, lookup: Optional[Lookup] = None) -> TxnSpec:
+        """Generate one Payment/NewOrder intent; ``lookup`` supplies the
+        values the read-modify-writes are computed from (and the observed
+        SSNs the batched validator will re-check)."""
+        lookup = lookup or self._dict_lookup
+        if self.rng.random() < 0.5:
+            return self._payment_spec(lookup)
+        return self._new_order_spec(lookup)
+
+    def next_batch(self, n: int, lookup: Optional[Lookup] = None) -> List[TxnSpec]:
+        """``n`` specs for the batched executor.  Pass the columnar store's
+        ``ArrayTable.get_or_insert`` as ``lookup`` to generate against it;
+        losers must be *regenerated* (their values derive from the observed
+        reads), which the batch drivers do by drawing fresh transactions."""
+        return [self.next_spec(lookup) for _ in range(n)]
+
+    def _payment_spec(self, lookup: Lookup) -> TxnSpec:
         rng = self.rng
         w = rng.randrange(self.warehouses)
         d = rng.randrange(DISTRICTS)
@@ -73,17 +98,16 @@ class TPCC:
         amount = rng.uniform(1, 5000)
         wk, dk, ck = f"W:{w}", f"D:{w}:{d}", f"C:{w}:{d}:{c}"
         # read-modify-write of three rows
-        wv = self.table.get_or_insert(wk).value
-        dv = self.table.get_or_insert(dk).value
-        cv = self.table.get_or_insert(ck).value
+        (wv, wssn), (dv, dssn), (cv, cssn) = lookup(wk), lookup(dk), lookup(ck)
         writes = [
             (wk, _f(_fi(wv) + amount)),
             (dk, struct.pack("<dI", _fi(dv) + amount, 1)),
             (ck, _f(_fi(cv) - amount)),
         ]
-        return worker.execute(reads=[wk, dk, ck], writes=writes)
+        return TxnSpec(reads=[wk, dk, ck], writes=writes,
+                       observed=[wssn, dssn, cssn])
 
-    def _new_order(self, worker: OCCWorker):
+    def _new_order_spec(self, lookup: Lookup) -> TxnSpec:
         rng = self.rng
         w = rng.randrange(self.warehouses)
         d = rng.randrange(DISTRICTS)
@@ -92,13 +116,15 @@ class TPCC:
         self._order_seq += 1
         o = self._order_seq
         reads = [f"I:{i}" for i in items] + [f"D:{w}:{d}"]
+        observed = [lookup(k)[1] for k in reads]
         writes: List[Tuple[str, bytes]] = [(f"O:{w}:{d}:{o}", struct.pack("<II", n_lines, w))]
         for n, i in enumerate(items):
             sk = f"S:{w}:{i}"
             reads.append(sk)
-            sv = self.table.get_or_insert(sk).value
+            sv, sssn = lookup(sk)
+            observed.append(sssn)
             qty = struct.unpack("<I", sv[:4])[0] if len(sv) >= 4 else 50
             qty = qty - 1 if qty > 10 else qty + 91
             writes.append((sk, struct.pack("<I", qty)))
             writes.append((f"OL:{w}:{d}:{o}:{n}", struct.pack("<Id", i, rng.uniform(1, 100))))
-        return worker.execute(reads=reads, writes=writes)
+        return TxnSpec(reads=reads, writes=writes, observed=observed)

@@ -15,6 +15,9 @@ from __future__ import annotations
 import random
 from typing import Iterator, List, Optional, Tuple
 
+import numpy as np
+
+from .batch import TxnSpec
 from .occ import OCCWorker
 from .table import Table
 
@@ -26,7 +29,9 @@ def key_of(i: int) -> str:
     return f"user{i:010d}"
 
 
-def load(table: Table, n_records: int = 100_000, seed: int = 7) -> None:
+def load(table, n_records: int = 100_000, seed: int = 7) -> None:
+    """Populate ``table`` — any store with ``insert(key, value)``, i.e. the
+    dict :class:`Table` or the columnar ``ArrayTable`` interchangeably."""
     rng = random.Random(seed)
     for i in range(n_records):
         table.insert(key_of(i), rng.randbytes(N_COLS * COL_BYTES))
@@ -38,11 +43,38 @@ class YCSBWriteOnly:
     def __init__(self, n_records: int, seed: int = 0):
         self.n_records = n_records
         self.rng = random.Random(seed)
+        self._vrng = np.random.default_rng(seed)  # C-speed value payloads
 
     def next_txn(self, worker: OCCWorker):
         key = key_of(self.rng.randrange(self.n_records))
         value = self.rng.randbytes(N_COLS * COL_BYTES)
         return worker.execute(reads=[], writes=[(key, value)])
+
+    def next_batch(self, n: int) -> List[TxnSpec]:
+        """``n`` write-only txn specs for the batched executor
+        (`repro.db.batch.BatchOCC`).  Generation is itself batched: one
+        value-blob draw sliced per txn, one vectorized key-index draw."""
+        nbytes = N_COLS * COL_BYTES
+        blob = self._vrng.bytes(n * nbytes)
+        idx = self._vrng.integers(0, self.n_records, n)
+        return [
+            TxnSpec(writes=[(key_of(k), blob[i * nbytes : (i + 1) * nbytes])])
+            for i, k in enumerate(idx.tolist())
+        ]
+
+    def next_batch_indexed(self, n: int):
+        """The same batch as index arrays for ``BatchOCC.execute_indexed``:
+        ``(rd_row, rd_start, wr_key_idx, wr_start, values, vlen)``.  Key
+        indices equal ArrayTable rows when the table was populated by
+        :func:`load` (keys inserted in index order)."""
+        nbytes = N_COLS * COL_BYTES
+        blob = self._vrng.bytes(n * nbytes)
+        wr_row = self._vrng.integers(0, self.n_records, n)
+        starts = np.arange(n + 1, dtype=np.int64)
+        values = [blob[i * nbytes : (i + 1) * nbytes] for i in range(n)]
+        vlen = np.full(n, nbytes, dtype=np.int64)
+        return (np.empty(0, np.int64), np.zeros(n + 1, np.int64),
+                wr_row.astype(np.int64), starts, values, vlen)
 
 
 class YCSBHybrid:
@@ -61,3 +93,19 @@ class YCSBHybrid:
             start = key_of(self.rng.randrange(self.n_records))
             scans.append((start, self.scan_length))
         return worker.execute(reads=[], writes=[(wkey, value)], scans=scans)
+
+    def next_batch(self, n: int) -> List[TxnSpec]:
+        """Batched hybrid specs: the key-range scan expands to explicit point
+        reads (YCSB keys are fixed-format, so logical order == key order —
+        the same assumption ``Table.scan_range`` makes)."""
+        rng = self.rng
+        out: List[TxnSpec] = []
+        for _ in range(n):
+            wkey = key_of(rng.randrange(self.n_records))
+            start = rng.randrange(self.n_records)
+            reads = [
+                key_of(j)
+                for j in range(start, min(start + self.scan_length, self.n_records))
+            ]
+            out.append(TxnSpec(reads=reads, writes=[(wkey, rng.randbytes(COL_BYTES))]))
+        return out

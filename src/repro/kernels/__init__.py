@@ -4,3 +4,4 @@
 #   ssm_scan.py         — chunked selective scan (models layer)
 #   rwkv6.py            — chunked wkv6 (models layer)
 #   scatter_max.py      — SSN-guarded scatter-max (recovery §5 batch replay)
+#   batch_occ.py        — segmented max/min reduce (batched OCC §4.2/§4.4)

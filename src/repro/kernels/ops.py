@@ -14,6 +14,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .batch_occ import seg_reduce as _seg_reduce_raw
 from .flash_attention import flash_attention_fwd
 from .rwkv6 import rwkv6_chunked
 from .scatter_max import ssn_scatter_max as _ssn_scatter_max_raw
@@ -61,5 +62,19 @@ def ssn_scatter_max(image_ssn, image_pos, key_id, ssn, pos, *,
     returns (winning ssn per slot, winning write position per slot)."""
     return _ssn_scatter_max_raw(
         image_ssn, image_pos, key_id, ssn, pos,
+        block_s=block_s, block_w=block_w, interpret=_auto_interpret(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots", "op", "block_s",
+                                             "block_w", "interpret"))
+def occ_seg_reduce(key_id, val, *, n_slots: int, op: str = "max",
+                   block_s: int = 128, block_w: int = 128,
+                   interpret: Optional[bool] = None):
+    """Segmented max/min for the batched OCC validator (§4.2/§4.4): per-txn
+    base-SSN max (``op="max"`` keyed by txn id) and per-tuple first-writer
+    position (``op="min"`` keyed by compacted row id)."""
+    return _seg_reduce_raw(
+        key_id, val, n_slots, op=op,
         block_s=block_s, block_w=block_w, interpret=_auto_interpret(interpret),
     )

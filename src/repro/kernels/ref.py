@@ -60,6 +60,26 @@ def scatter_max_ref(
     return out_ssn.astype(image_ssn.dtype), out_pos.astype(image_pos.dtype)
 
 
+def seg_reduce_ref(
+    key_id: np.ndarray,   # (W,) int slot id per item
+    val: np.ndarray,      # (W,) int value per item
+    n_slots: int,
+    op: str = "max",
+) -> np.ndarray:
+    """Sequential oracle for the batched-OCC segmented reduce: per slot the
+    max (or min) value among items with that key; slots with no member stay
+    at the identity (-1 for max, int32-max ``NO_WRITER`` for min)."""
+    init = np.iinfo(np.int32).max if op == "min" else -1
+    out = np.full(n_slots, init, dtype=np.int64)
+    for k, v in zip(key_id, val):
+        if op == "min":
+            if v < out[k]:
+                out[k] = v
+        elif v > out[k]:
+            out[k] = v
+    return out.astype(np.int32)
+
+
 def ssm_scan_ref(
     x: jax.Array,      # (B, H, S, P)   inputs per head
     dt: jax.Array,     # (B, H, S)      softplus'd step sizes

@@ -11,7 +11,14 @@ class Cell:
 
 
 def _engine(n=2):
-    return PoplarEngine(EngineConfig(n_buffers=n, device_kind="null"))
+    # a huge flush interval pins all flushing/heartbeating to the explicit
+    # force-ticks these tests issue: with the conftest's sub-ms default, a
+    # slow CI machine can let drain()'s inline null-device logger tick
+    # auto-heartbeat between steps and commit Qwr txns before the
+    # "not yet committed" assertions run
+    return PoplarEngine(
+        EngineConfig(n_buffers=n, device_kind="null", flush_interval=60.0)
+    )
 
 
 def test_qww_commits_on_own_dsn_only():

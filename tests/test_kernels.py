@@ -11,8 +11,10 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.ops import flash_attention, rwkv6, ssm_scan, ssn_scatter_max
-from repro.kernels.ref import attention_ref, rwkv6_ref, scatter_max_ref, ssm_scan_ref
+from repro.kernels.ops import (flash_attention, occ_seg_reduce, rwkv6,
+                               ssm_scan, ssn_scatter_max)
+from repro.kernels.ref import (attention_ref, rwkv6_ref, scatter_max_ref,
+                               seg_reduce_ref, ssm_scan_ref)
 from repro.kernels.scatter_max import NO_POS
 
 RNG = np.random.default_rng(42)
@@ -149,6 +151,39 @@ def test_ssn_scatter_max_empty_writes_is_identity():
     )
     np.testing.assert_array_equal(np.asarray(out_ssn), image_ssn)
     np.testing.assert_array_equal(np.asarray(out_pos), image_pos)
+
+
+@pytest.mark.parametrize("op", ["max", "min"])
+@pytest.mark.parametrize(
+    "n_slots,n_items,block_s,block_w",
+    [
+        (64, 256, 128, 128),    # single slot block, padded items
+        (300, 1000, 128, 256),  # unaligned sizes
+        (1000, 37, 256, 128),   # sparse: most slots empty
+        (5, 3, 128, 128),       # tiny
+    ],
+)
+def test_occ_seg_reduce_vs_ref(op, n_slots, n_items, block_s, block_w):
+    """Batched-OCC segmented reduce (base-SSN max / first-writer min) vs the
+    sequential oracle, including empty slots (identity sentinels)."""
+    rng = np.random.default_rng(n_slots * 13 + n_items + (op == "min"))
+    key = rng.integers(0, n_slots, n_items).astype(np.int32)
+    val = rng.integers(0, 500, n_items).astype(np.int32)
+    out = occ_seg_reduce(key, val, n_slots=n_slots, op=op,
+                         block_s=block_s, block_w=block_w, interpret=True)
+    ref = seg_reduce_ref(key, val, n_slots, op)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+def test_occ_seg_reduce_empty_items():
+    out = occ_seg_reduce(np.empty(0, np.int32), np.empty(0, np.int32),
+                         n_slots=7, op="max", interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.full(7, -1, np.int32))
+    out = occ_seg_reduce(np.empty(0, np.int32), np.empty(0, np.int32),
+                         n_slots=7, op="min", interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.full(7, np.iinfo(np.int32).max, np.int32)
+    )
 
 
 # --- model-level optimized-impl equivalence (flash vjp, chunked mixers) ------

@@ -74,7 +74,12 @@ def test_elr_reader_commits_after_writer():
     table = Table()
     table.insert("a", b"0")
     table.insert("b", b"0")
-    eng = _poplar()
+    # a huge flush interval keeps drain()'s inline null-device logger tick
+    # from auto-flushing between steps on a slow CI machine — the "nothing
+    # flushed yet" assertions below need flushing pinned to quiesce()
+    eng = PoplarEngine(
+        EngineConfig(n_buffers=2, device_kind="null", flush_interval=60.0)
+    )
     w0 = OCCWorker(table, eng, 0)
     w1 = OCCWorker(table, eng, 1)
     t_writer = w0.execute(reads=[], writes=[("a", b"W")])

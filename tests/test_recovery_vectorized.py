@@ -144,6 +144,51 @@ def test_ssn_tie_and_nul_key_semantics():
     assert b"a\x00" in st.data and st.data[b"a\x00"] == (b"nul", 1)
 
 
+def test_heartbeat_records_end_to_end(tmp_path):
+    """`_emit_heartbeat` zero-write records: they must unpin CSN at runtime
+    and RSNe at recovery, while both the columnar decode and the scalar
+    replay apply no writes for them (regression for the idle-buffer liveness
+    path)."""
+    engine = PoplarEngine(
+        EngineConfig(n_buffers=2, device_kind="null", device_dir=str(tmp_path))
+    )
+    w = Worker(engine, 0)  # worker 0 -> buffer 0; buffer 1 stays idle
+    cells = {"a": _Cell(), "b": _Cell()}
+
+    t1 = Txn(tid=1, write_set=[("a", b"v1")])
+    w.run(t1, [], [cells["a"]])
+    t2 = Txn(
+        tid=2, read_set=[("a", cells["a"].ssn)], write_set=[("b", b"v2")]
+    )
+    w.run(t2, [cells["a"]], [cells["b"]])
+
+    engine.logger_tick(0, force=True)  # flush buffer 0 only
+    w.drain()
+    assert t1.committed  # write-only: commits on its own buffer's DSN
+    assert not t2.committed  # RAW-carrying: CSN pinned at 0 by idle buffer 1
+
+    engine.logger_tick(1, force=True)  # idle buffer 1 heartbeats to frontier
+    assert engine.commit.csn >= t2.ssn  # CSN unpinned
+    w.drain()
+    assert t2.committed
+
+    for d in engine.devices:
+        d.close()
+
+    # the heartbeat is a zero-write tid-0 record in buffer 1's log
+    cols = decode_columnar(engine.devices[1].read_all())
+    assert cols.n_records >= 1
+    assert (cols.n_writes == 0).all() and (cols.tid == 0).all()
+    assert len(cols.wr_rec) == 0  # columnar decode carries no writes for it
+    assert cols.last_ssn == t2.ssn
+
+    expected = {b"a": (b"v1", t1.ssn), b"b": (b"v2", t2.ssn)}
+    for mode in ("scalar", "vectorized", "pallas"):
+        st = recover(engine.devices, parallel=False, mode=mode)
+        assert st.rsne == t2.ssn, mode  # heartbeat unpins RSNe (else 0)
+        assert st.data == expected, mode  # zero-write records add no keys
+
+
 def test_recover_rejects_unknown_mode(tmp_path):
     engine = PoplarEngine(EngineConfig(n_buffers=1, device_kind="null"))
     with pytest.raises(ValueError):
