@@ -324,13 +324,44 @@ _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 _JSON_ACC: Dict[str, List[Dict]] = {}
 
 
+def run_metadata() -> Dict[str, str]:
+    """Environment fingerprint stamped into every ``BENCH_<name>.json`` so
+    the committed bench trajectory stays interpretable across machines:
+    UTC timestamp, hostname, the emulated-SSD bandwidth scaling, and the
+    python/jax/numpy versions (package metadata — jax itself stays
+    unimported; most benches never need it)."""
+    import datetime
+    import platform
+    import socket
+
+    def _ver(pkg: str) -> str:
+        try:
+            from importlib.metadata import version
+
+            return version(pkg)
+        except Exception:
+            return "unknown"
+
+    return {
+        "utc": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+        "hostname": socket.gethostname(),
+        "repro_ssd_bw": os.environ.get("REPRO_SSD_BW", ""),
+        "python": platform.python_version(),
+        "jax": _ver("jax"),
+        "numpy": _ver("numpy"),
+    }
+
+
 def emit(rows: Sequence[Dict], header: Sequence[str], name: Optional[str] = None,
          append: bool = False) -> None:
-    """Print a CSV block; with ``name``, also persist the rows to
-    ``BENCH_<name>.json`` at the repo root so the perf trajectory is
-    machine-readable across PRs.  A plain emit resets the file's rows (so a
-    re-invoked ``run()`` never duplicates); a benchmark emitting several
-    sub-tables passes ``append=True`` on the later calls (table23)."""
+    """Print a CSV block; with ``name``, also persist the rows (plus the
+    :func:`run_metadata` fingerprint) to ``BENCH_<name>.json`` at the repo
+    root so the perf trajectory is machine-readable across PRs.  A plain
+    emit resets the file's rows (so a re-invoked ``run()`` never
+    duplicates); a benchmark emitting several sub-tables passes
+    ``append=True`` on the later calls (table23)."""
     print(",".join(header))
     for r in rows:
         print(",".join(str(r.get(h, "")) for h in header))
@@ -342,5 +373,8 @@ def emit(rows: Sequence[Dict], header: Sequence[str], name: Optional[str] = None
     acc.extend(dict(r) for r in rows)
     path = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
     with open(path, "w") as f:
-        json.dump({"bench": name, "fast": FAST, "rows": acc}, f, indent=1)
+        json.dump(
+            {"bench": name, "fast": FAST, "meta": run_metadata(), "rows": acc},
+            f, indent=1,
+        )
         f.write("\n")

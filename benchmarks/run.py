@@ -25,6 +25,7 @@ def main(only=None) -> None:
     import fig8_breakdown
     import fig9_scalability
     import fig10_commit_protocol
+    import fig_shard_scalability
     import table23_recovery
     import roofline
 
@@ -35,6 +36,7 @@ def main(only=None) -> None:
         ("fig8_breakdown", fig8_breakdown.run),
         ("fig9_scalability", fig9_scalability.run),
         ("fig10_commit_protocol", fig10_commit_protocol.run),
+        ("fig_shard_scalability", fig_shard_scalability.run),
         ("table23_recovery", table23_recovery.run),
         ("roofline", roofline.run),
     ]

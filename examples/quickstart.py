@@ -20,16 +20,18 @@ from repro.launch import train as train_mod
 
 def main() -> None:
     journal = tempfile.mkdtemp(prefix="quickstart_journal_")
+    # QUICKSTART_STEPS shrinks the run further (CI smoke uses 12)
+    steps = int(os.environ.get("QUICKSTART_STEPS", "60"))
     train_mod.main([
         "--arch", "tinyllama-1.1b",
         "--reduced",
         "--n-layers", "4",
         "--d-model", "128",
-        "--steps", "60",
+        "--steps", str(steps),
         "--batch", "8",
         "--seq", "128",
         "--journal-dir", journal,
-        "--save-every", "20",
+        "--save-every", str(min(20, max(steps // 2, 1))),
         "--log-every", "10",
     ])
     print(f"\njournal lanes written to {journal}:")

@@ -82,6 +82,20 @@ class CommitProtocol:
         return self._csn
 
     # --- commit stage -------------------------------------------------------
+    def committable(self, ssn: int, has_reads: bool, buffer_id: int = -1) -> bool:
+        """The watermark rule, factored out of :meth:`drain` so external
+        coordinators (the sharded engine's cross-shard commit, which applies
+        this same test *per participant shard*) share one definition:
+
+        * write-only  — own-buffer durability: ``ssn <= DSN(buffer_id)``;
+        * with reads  — global committability: ``ssn <= CSN`` (every RAW
+          predecessor has a smaller SSN, hence is durable in whichever
+          buffer holds it; read-only txns pass ``buffer_id=-1``).
+        """
+        if has_reads:
+            return ssn <= self.advance_csn()
+        return ssn <= self.buffers[buffer_id].dsn
+
     def _commit(self, txn: Txn) -> None:
         txn.committed = True
         txn.t_commit = time.perf_counter()
@@ -89,8 +103,10 @@ class CommitProtocol:
             self.on_commit(txn)
 
     def drain(self, queues: CommitQueues) -> int:
-        """Commit every currently-committable transaction for one worker.
-        Returns the number committed."""
+        """Commit every currently-committable transaction for one worker
+        (the :meth:`committable` rule, with the CSN hoisted out of the Qwr
+        loop — it only grows during a drain).  Returns the number
+        committed."""
         n = 0
         with queues.lock:
             # Qww: own-buffer durability only

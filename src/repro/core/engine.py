@@ -189,6 +189,43 @@ class PoplarEngine(LoggingEngine):
         with self._count_lock:
             self.txn_logged += len(txns)
 
+    # --- external-coordinator extension points -----------------------------
+    # The sharded engine (`repro.shard`) logs cross-shard records through the
+    # same buffers but tracks commit itself (its watermark rule spans several
+    # engines), so the reserve and fill halves are exposed separately: the
+    # coordinator must learn every participant's SSN before it can frame any
+    # record (the xdep footer carries the full SSN vector).
+
+    def reserve_record(self, txn: Txn, base_ssn: int, worker_id: int) -> int:
+        """Latched half of Algorithm 1 for an externally-committed record:
+        reserve an SSN + slot on ``worker_id``'s mapped buffer from ``base``
+        (which may come from tuple state outside this engine).  The caller
+        must finish with :meth:`fill_record` once ``txn`` is fully framed.
+        Unlike :meth:`allocate`, a slot is reserved even for zero-write
+        records (cross-shard read-participant markers must be durable)."""
+        buf = self.buffer_for(worker_id)
+        length = _framed_len(txn)
+        s, off, seg = buf.reserve(base_ssn, length)
+        txn.ssn = s
+        txn.buffer_id = buf.id
+        txn.offset = off
+        txn._seg_idx = seg  # type: ignore[attr-defined]
+        return s
+
+    def fill_record(self, txn: Txn) -> None:
+        """Memcpy half for :meth:`reserve_record` (no commit-queue push —
+        the external coordinator owns the commit decision)."""
+        record = txn.encode()
+        assert len(record) == _framed_len(txn), (
+            f"framed length drift: {len(record)} != {_framed_len(txn)}"
+        )
+        self.buffers[txn.buffer_id].fill(
+            txn.offset, txn._seg_idx, record  # type: ignore[attr-defined]
+        )
+        txn.t_precommit = time.perf_counter()
+        with self._count_lock:
+            self.txn_logged += 1
+
     def drain(self, worker_id: int) -> int:
         # On NVM-class devices (sub-5us persist) a worker flushes its own
         # buffer inline before draining: the IO is cheaper than waiting for
@@ -304,6 +341,9 @@ def _framed_len(txn: Txn) -> int:
     for key, val in txn.write_set:
         kb = key.encode() if isinstance(key, str) else bytes(key)
         n += 8 + len(kb) + len(val)
+    if txn.xdep is not None:
+        # cross-shard footer: u32 n_parts + per part (u32 shard + u64 ssn)
+        n += 4 + 12 * len(txn.xdep)
     return n
 
 

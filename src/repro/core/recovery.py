@@ -264,6 +264,7 @@ def replay_columnar(
     rsne: int,
     base: Optional[Dict[bytes, Tuple[bytes, int]]] = None,
     use_kernel: bool = False,
+    record_mask: Optional[Sequence[Optional[np.ndarray]]] = None,
 ) -> Tuple[Dict[bytes, Tuple[bytes, int]], int, int]:
     """Batched last-writer-wins replay over columnar device logs.
 
@@ -273,6 +274,11 @@ def replay_columnar(
 
     With ``use_kernel=True`` the guarded apply against the image runs through
     the Pallas SSN scatter-max kernel instead of the numpy reduction.
+
+    ``record_mask`` (aligned with ``logs``; entries may be None) injects an
+    extra per-record commit decision ANDed with the local §5 guard — the
+    extension point sharded recovery uses to drop cross-shard records that
+    are not durable on every participant (`repro.shard.recovery`).
 
     Returns ``(data, n_replayed, n_skipped_uncommitted)``.
     """
@@ -295,8 +301,10 @@ def replay_columnar(
         np.fromiter((v for v, _ in base.values()), dtype=object, count=n_base)
     ]
 
-    for log in logs:
+    for li, log in enumerate(logs):
         ok = committed_mask(log, rsne)
+        if record_mask is not None and record_mask[li] is not None:
+            ok = ok & record_mask[li]
         n_ok = int(np.count_nonzero(ok))
         n_replayed += n_ok
         n_skipped += log.n_records - n_ok

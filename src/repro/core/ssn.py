@@ -70,6 +70,23 @@ def writeback(ssn: int, write_items: Iterable) -> None:
         e.ssn = ssn
 
 
+def base_ssn_global(ssn_arrays: Iterable[np.ndarray]) -> int:
+    """Algorithm 1 lines 1–4 lifted across shards (`repro.shard`): the base
+    of a cross-shard transaction is the max tuple SSN over its read and
+    write sets on *every* participating shard.  Per-shard SSN spaces are
+    independent, so this mixes spaces — deliberately: reserving from the
+    mixed base on each participant pushes every participant's buffer SSN
+    past every observed tuple SSN, which is exactly what makes the
+    per-shard ``ssn <= CSN`` commit rule imply global RAW durability."""
+    base = 0
+    for arr in ssn_arrays:
+        if len(arr):
+            m = int(arr.max())
+            if m > base:
+                base = m
+    return base
+
+
 # --- batched Algorithm 1 (array-native forward path) -------------------------
 
 def base_ssn_batch(acc_ssn: np.ndarray, acc_start: np.ndarray) -> np.ndarray:

@@ -12,6 +12,19 @@ committed through the Qwr / CSN path and carries potential RAW dependencies.
 Write-only (Qww) records may be replayed past RSNe during recovery (§5);
 records with HAS_READS may not.
 
+``flags`` bit 1: XSHARD — the record belongs to a cross-shard transaction
+(`repro.shard`).  The payload then carries a dependency footer after the
+writes::
+
+    footer := [u32 n_parts] n_parts * ([u32 shard_id][u64 ssn])
+
+listing every participating shard and the SSN the transaction holds there —
+the explicit cross-shard WAW/RAW dependency edge.  The transaction's global
+id (gtid) is the record's ``tid``, identical on every participant, so
+sharded recovery can resolve a consistent cut: a cross-shard transaction is
+replayed iff a record with its gtid is durable on *all* participants (see
+``repro.shard.recovery``).
+
 The length+crc framing makes torn tail writes detectable: recovery truncates
 the log at the first bad frame, which is exactly the paper's "buffer hole"
 semantics at the device level.
@@ -27,10 +40,12 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 FLAG_HAS_READS = 0x01
+FLAG_XSHARD = 0x02
 
 _HDR = struct.Struct("<II")           # length, crc32
 _PAYLOAD_FIXED = struct.Struct("<QQBI")  # ssn, tid, flags, n_writes
 _U32 = struct.Struct("<I")
+_XPART = struct.Struct("<IQ")         # shard_id, ssn (xdep footer entry)
 
 
 @dataclass
@@ -49,6 +64,10 @@ class Txn:
     offset: int = -1          # logical offset of the record in its log buffer
     record: bytes = b""
 
+    # cross-shard dependency edge (repro.shard): every participant shard and
+    # the SSN this transaction holds there; None for single-shard records
+    xdep: Optional[List[Tuple[int, int]]] = None
+
     # lifecycle timestamps (perf accounting)
     t_start: float = 0.0
     t_precommit: float = 0.0  # SSN allocated + record buffered ("pre-committed")
@@ -66,13 +85,11 @@ class Txn:
 
     def encode(self) -> bytes:
         """Serialize this transaction into a single framed log record."""
+        flags = FLAG_HAS_READS if self.has_reads else 0
+        if self.xdep is not None:
+            flags |= FLAG_XSHARD
         parts = [
-            _PAYLOAD_FIXED.pack(
-                self.ssn,
-                self.tid,
-                FLAG_HAS_READS if self.has_reads else 0,
-                len(self.write_set),
-            )
+            _PAYLOAD_FIXED.pack(self.ssn, self.tid, flags, len(self.write_set))
         ]
         for key, val in self.write_set:
             kb = key.encode() if isinstance(key, str) else bytes(key)
@@ -80,6 +97,10 @@ class Txn:
             parts.append(kb)
             parts.append(_U32.pack(len(val)))
             parts.append(val)
+        if self.xdep is not None:
+            parts.append(_U32.pack(len(self.xdep)))
+            for shard_id, ssn in self.xdep:
+                parts.append(_XPART.pack(shard_id, ssn))
         payload = b"".join(parts)
         self.record = _HDR.pack(len(payload), zlib.crc32(payload)) + payload
         return self.record
@@ -232,6 +253,9 @@ class LogRecord:
     tid: int
     has_reads: bool
     writes: List[Tuple[bytes, bytes]]
+    # cross-shard dependency edge: [(shard_id, ssn), ...] over every
+    # participant; None for single-shard records.  The gtid is ``tid``.
+    xdep: Optional[List[Tuple[int, int]]] = None
 
     @property
     def write_only(self) -> bool:
@@ -274,11 +298,42 @@ def decode_records(buf: bytes) -> List[LogRecord]:
             val = payload[pos : pos + vlen]
             pos += vlen
             writes.append((key, val))
+        xdep: Optional[List[Tuple[int, int]]] = None
+        if ok and flags & FLAG_XSHARD:
+            xdep, pos = _decode_xdep(payload, pos, length)
+            ok = xdep is not None
         if not ok:
             break
-        out.append(LogRecord(ssn=ssn, tid=tid, has_reads=bool(flags & FLAG_HAS_READS), writes=writes))
+        out.append(
+            LogRecord(
+                ssn=ssn,
+                tid=tid,
+                has_reads=bool(flags & FLAG_HAS_READS),
+                writes=writes,
+                xdep=xdep,
+            )
+        )
         off = end
     return out
+
+
+def _decode_xdep(
+    payload: bytes, pos: int, length: int
+) -> Tuple[Optional[List[Tuple[int, int]]], int]:
+    """Parse the XSHARD dependency footer; ``(None, pos)`` on a bounds error
+    (torn frame — the caller stops decoding, like any other malformed frame)."""
+    if pos + 4 > length:
+        return None, pos
+    (n_parts,) = _U32.unpack_from(payload, pos)
+    pos += 4
+    if pos + n_parts * _XPART.size > length:
+        return None, pos
+    parts: List[Tuple[int, int]] = []
+    for _ in range(n_parts):
+        shard_id, ssn = _XPART.unpack_from(payload, pos)
+        pos += _XPART.size
+        parts.append((shard_id, ssn))
+    return parts, pos
 
 
 @dataclass
@@ -324,6 +379,16 @@ class ColumnarLog:
     keys: List[bytes]
     values: List[bytes]
     _values_obj: Optional[np.ndarray] = None
+    # cross-shard dependency columns (``None`` when the log carries no
+    # XSHARD records — the common case, and the shape every pre-shard
+    # constructor produces).  ``x_rec[i]`` is the owning record index of the
+    # i-th cross-shard record, ``xp_start`` the ``(len(x_rec)+1,)`` prefix
+    # delimiting its participant slice of ``xp_shard``/``xp_ssn``.  The gtid
+    # of ``x_rec[i]`` is ``tid[x_rec[i]]``.
+    x_rec: Optional[np.ndarray] = None
+    xp_start: Optional[np.ndarray] = None
+    xp_shard: Optional[np.ndarray] = None
+    xp_ssn: Optional[np.ndarray] = None
 
     @property
     def n_records(self) -> int:
@@ -368,8 +433,19 @@ class ColumnarLog:
     def wr_has_reads(self) -> np.ndarray:
         return self.has_reads[self.wr_rec]
 
+    @property
+    def n_xshard(self) -> int:
+        return 0 if self.x_rec is None else len(self.x_rec)
+
     def to_records(self) -> List[LogRecord]:
         """Round-trip back to row objects (tests / scalar-oracle interop)."""
+        xdeps: Dict[int, List[Tuple[int, int]]] = {}
+        if self.x_rec is not None:
+            for i, rec in enumerate(self.x_rec.tolist()):
+                lo, hi = int(self.xp_start[i]), int(self.xp_start[i + 1])
+                xdeps[rec] = list(
+                    zip(self.xp_shard[lo:hi].tolist(), self.xp_ssn[lo:hi].tolist())
+                )
         out: List[LogRecord] = []
         w = 0
         for i in range(self.n_records):
@@ -380,6 +456,7 @@ class ColumnarLog:
                     tid=int(self.tid[i]),
                     has_reads=bool(self.has_reads[i]),
                     writes=list(zip(self.keys[w : w + nw], self.values[w : w + nw])),
+                    xdep=xdeps.get(i),
                 )
             )
             w += nw
@@ -402,6 +479,10 @@ def decode_columnar(buf: bytes) -> ColumnarLog:
     klens: List[int] = []
     keys: List[bytes] = []
     values: List[bytes] = []
+    x_rec: List[int] = []
+    xp_shard: List[int] = []
+    xp_ssn: List[int] = []
+    xp_start: List[int] = [0]
 
     off = 0
     n = len(buf)
@@ -439,6 +520,16 @@ def decode_columnar(buf: bytes) -> ColumnarLog:
             wr_rec.append(rec_i)
             klens.append(klen)
             wrote += 1
+        if ok and flags & FLAG_XSHARD:
+            parts, pos = _decode_xdep(payload, pos, length)
+            if parts is None:
+                ok = False
+            else:
+                x_rec.append(rec_i)
+                for shard_id, pssn in parts:
+                    xp_shard.append(shard_id)
+                    xp_ssn.append(pssn)
+                xp_start.append(len(xp_shard))
         if not ok:
             # drop the partial record's writes and stop at the bad frame
             del keys[len(keys) - wrote :]
@@ -463,6 +554,10 @@ def decode_columnar(buf: bytes) -> ColumnarLog:
         keys_fixed=ColumnarLog.encode_keys_fixed(keys, klens),
         keys=keys,
         values=values,
+        x_rec=np.asarray(x_rec, dtype=np.int64) if x_rec else None,
+        xp_start=np.asarray(xp_start, dtype=np.int64) if x_rec else None,
+        xp_shard=np.asarray(xp_shard, dtype=np.int64) if x_rec else None,
+        xp_ssn=np.asarray(xp_ssn, dtype=np.int64) if x_rec else None,
     )
 
 

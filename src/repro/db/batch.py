@@ -249,6 +249,7 @@ class BatchOCC:
         n_workers: int = 1,
         mode: str = "vectorized",
         tid_stride: int = TID_STRIDE,
+        worker_id_base: int = 0,
     ):
         if mode not in ("vectorized", "pallas"):
             raise ValueError(f"unknown batch OCC mode {mode!r}")
@@ -256,9 +257,16 @@ class BatchOCC:
         self.engine = engine
         self.n_workers = n_workers
         self.mode = mode
-        self.stripes = [TidStripe(w, tid_stride) for w in range(n_workers)]
+        # worker_id_base offsets this executor's worker ids and tid stripes
+        # into a disjoint slice of the global spaces — the injection point
+        # that lets several executors (one per shard, `repro.shard`) share
+        # one tid universe without a cross-shard allocator
+        self.worker_id_base = worker_id_base
+        self.stripes = [
+            TidStripe(worker_id_base + w, tid_stride) for w in range(n_workers)
+        ]
         for w in range(n_workers):
-            engine.register_worker(w)
+            engine.register_worker(worker_id_base + w)
         self.committed_submitted = 0
         self.aborts = 0  # per-round validation losses (retries count, like OCCWorker)
 
@@ -375,7 +383,9 @@ class BatchOCC:
         b = len(flat.rd_len)
         res = BatchResult()
         if worker_ids is None:
-            worker_ids = [i % self.n_workers for i in range(b)]
+            worker_ids = [
+                self.worker_id_base + i % self.n_workers for i in range(b)
+            ]
         workers = np.asarray(worker_ids, dtype=np.int64)
         specs = flat.specs
         table = self.table
@@ -415,7 +425,7 @@ class BatchOCC:
                     for j, i in zip(win_local.tolist(), win.tolist()):
                         spec = specs[i]
                         w = int(workers[i])
-                        t = Txn(tid=self.stripes[w].next())
+                        t = Txn(tid=self.stripes[w - self.worker_id_base].next())
                         t.worker_id = w  # type: ignore[attr-defined]
                         t.t_start = t_start
                         if spec.reads:
@@ -429,7 +439,7 @@ class BatchOCC:
                     # stay correct; sets are not materialized)
                     for i, nr in zip(win.tolist(), flat.rd_len[win].tolist()):
                         w = int(workers[i])
-                        t = Txn(tid=self.stripes[w].next())
+                        t = Txn(tid=self.stripes[w - self.worker_id_base].next())
                         t.worker_id = w  # type: ignore[attr-defined]
                         t.t_start = t_start
                         if nr:
@@ -533,7 +543,7 @@ class BatchOCC:
     def drain(self) -> int:
         n = 0
         for w in range(self.n_workers):
-            n += self.engine.drain(w)
+            n += self.engine.drain(self.worker_id_base + w)
         return n
 
 

@@ -1,0 +1,208 @@
+"""Sharded recovery: per-shard vectorized replay + the cross-shard cut.
+
+* a cross-shard transaction durable on *all* participants is replayed; one
+  missing any participant's record is dropped on every shard (all-or-
+  nothing — §3.1's recoverability argument applied per dependency edge);
+* crash-at-arbitrary-point property: every acknowledged transaction's
+  writes survive replay, cross-shard replay is atomic, and the recovered
+  state of a quiesced run equals both the live sharded state and a
+  single-shard oracle run of the same schedule;
+* ``mode="vectorized"``, ``"pallas"`` and ``"scalar"`` agree record-for-
+  record on randomized crash logs.
+"""
+
+import random
+from typing import List
+
+from repro.core import EngineConfig, PoplarEngine
+from repro.db import ArrayTable, BatchOCC, TxnSpec
+from repro.shard import ShardedConfig, ShardedEngine, recover_sharded
+
+
+def _mk(tmp_path=None, **kw) -> ShardedEngine:
+    cfg = dict(n_shards=2, n_buffers=1, n_workers=2, device_kind="ssd",
+               device_clock="virtual")
+    cfg.update(kw)
+    if tmp_path is not None:
+        cfg["device_dir"] = str(tmp_path)
+    return ShardedEngine(ShardedConfig(**cfg))
+
+
+def _keys_by_shard(eng: ShardedEngine, n: int) -> List[List[str]]:
+    out: List[List[str]] = [[] for _ in range(eng.cfg.n_shards)]
+    for i in range(n):
+        k = f"user{i:010d}"
+        out[eng.shard_of(k)].append(k)
+    return out
+
+
+def test_cut_keeps_fully_durable_cross_shard():
+    eng = _mk()
+    ks = _keys_by_shard(eng, 40)
+    res = eng.execute_batch(
+        [TxnSpec(writes=[(ks[0][0], b"X0"), (ks[1][0], b"X1")])]
+    )
+    xt = res.cross[0]
+    eng.tick(force=True)  # durable on both shards; never swept/acknowledged
+    st = recover_sharded(eng.devices, parallel=False)
+    # write-only + durable everywhere == committed by the generalized Qww
+    # rule, so replay keeps it even though no ack was ever delivered
+    assert st.n_cross_seen == 1 and st.n_cross_dropped == 0
+    assert st.data[ks[0][0].encode()] == (b"X0", xt.parts[0].ssn)
+    assert st.data[ks[1][0].encode()] == (b"X1", xt.parts[1].ssn)
+
+
+def test_cut_drops_partially_durable_cross_shard():
+    eng = _mk()
+    ks = _keys_by_shard(eng, 40)
+    eng.insert(ks[0][0], b"old0")
+    eng.insert(ks[1][0], b"old1")
+    # a committed single-shard write on shard 0 rides along
+    r0 = eng.execute_batch([TxnSpec(writes=[(ks[0][1], b"solo")])])
+    res = eng.execute_batch(
+        [TxnSpec(writes=[(ks[0][0], b"X0"), (ks[1][0], b"X1")])]
+    )
+    assert len(res.cross) == 1
+    # crash with only shard 0 flushed: the cross record is torn on shard 1
+    for i in range(len(eng.shards[0].engine.buffers)):
+        eng.shards[0].engine.logger_tick(i, force=True)
+    eng.drain()
+    assert r0.committed[0].committed and not res.cross[0].committed
+    for mode in ("vectorized", "scalar"):
+        st = recover_sharded(eng.devices, parallel=False, mode=mode)
+        assert st.n_cross_seen == 1 and st.n_cross_dropped == 1, mode
+        # all-or-nothing: neither shard reflects the dropped transaction,
+        # the committed rider survives
+        assert ks[0][0].encode() not in st.data or (
+            st.data[ks[0][0].encode()][0] == b"old0"
+        )
+        assert st.data.get(ks[1][0].encode(), (b"old1", 0))[0] == b"old1"
+        assert st.data[ks[0][1].encode()][0] == b"solo"
+
+
+def test_raw_carrying_cross_shard_needs_rsne_on_every_shard():
+    """A cross-shard txn *with reads* whose record is durable everywhere
+    but past one shard's RSNe frontier is dropped (the generalized Qwr
+    rule evaluated at recovery)."""
+    eng = _mk(n_buffers=2)
+    ks = _keys_by_shard(eng, 40)
+    eng.insert(ks[0][0], b"old0")
+    res = eng.execute_batch(
+        [TxnSpec(reads=[ks[1][0]], writes=[(ks[0][0], b"X0"), (ks[1][1], b"X1")])]
+    )
+    xt = res.cross[0]
+    # flush only the buffers holding the records: the sibling buffer on
+    # each shard stays behind, pinning that shard's RSNe below the record
+    for part in xt.parts:
+        sh = eng.shards[part.shard]
+        sh.engine.buffers[part.buffer_id].force_establish()
+        sh.engine.buffers[part.buffer_id].flush_ready(sh.engine.devices[part.buffer_id])
+    st = recover_sharded(eng.devices, parallel=False)
+    assert st.n_cross_seen == 1 and st.n_cross_dropped == 1
+    assert st.data.get(ks[0][0].encode(), (b"old0", 0))[0] == b"old0"
+    # after full flush the same logs keep it
+    eng.tick(force=True)
+    st2 = recover_sharded(eng.devices, parallel=False)
+    assert st2.n_cross_dropped == 0
+    assert st2.data[ks[0][0].encode()] == (b"X0", xt.parts[0].ssn)
+
+
+# --- crash-at-arbitrary-point property ---------------------------------------
+
+def _random_batches(rng, keys, n_batches):
+    """Batches with unique keys *within* each batch (no intra-batch
+    conflicts); across batches keys repeat, so pending cross-shard locks
+    legitimately abort later writers."""
+    out = []
+    for _ in range(n_batches):
+        ks = rng.sample(keys, rng.randrange(4, min(12, len(keys))))
+        specs = []
+        while ks:
+            nw = rng.choice([1, 1, 2])  # 2-key specs may span shards
+            grp, ks = ks[:nw], ks[nw:]
+            reads = [grp[0]] if rng.random() < 0.3 else []
+            specs.append(TxnSpec(
+                reads=reads,
+                writes=[(k, f"{k}@{rng.randrange(1 << 20)}".encode())
+                        for k in grp],
+            ))
+        out.append(specs)
+    return out
+
+
+def test_sharded_crash_recovery_property(tmp_path):
+    for seed in range(4):
+        rng = random.Random(100 + seed)
+        n_shards = rng.choice([2, 3])
+        eng = _mk(tmp_path / f"s{seed}", n_shards=n_shards,
+                  n_buffers=rng.choice([1, 2]))
+        oracle_tab = ArrayTable()
+        oracle_eng = PoplarEngine(EngineConfig(n_buffers=1, device_kind="null"))
+        oracle = BatchOCC(oracle_tab, oracle_eng, n_workers=2)
+
+        keys = [f"user{i:010d}" for i in range(16)]
+        for k in keys[:8]:
+            eng.insert(k, b"init")
+            oracle_tab.insert(k, b"init")
+
+        batches = _random_batches(rng, keys, 5)
+        crash_after = rng.randrange(0, len(batches) + 1)
+        acked: List = []       # (obj, kind) acknowledged before the crash
+        for bi, specs in enumerate(batches):
+            res = eng.execute_batch(specs)
+            # the oracle replays exactly the sharded run's winners (losers
+            # aborted against pending cross-shard locks and touched nothing);
+            # keys are unique within a batch, so intra-batch order is free
+            winners = sorted(res.committed_idx + res.cross_idx)
+            ro = oracle.execute_batch([specs[i] for i in winners])
+            assert not ro.aborted, (seed, bi)
+            if bi < crash_after:
+                eng.tick(force=True)
+                eng.tick(force=True)   # heartbeat round for lagging buffers
+                eng.drain()
+                acked += [(t, "s") for t in res.committed if t.committed]
+                acked += [(x, "x") for x in res.cross if x.committed]
+            # else: volatile tail — never flushed before the crash
+        oracle_eng.quiesce(range(2))
+
+        # crash: whatever the devices hold is the durable image
+        st = recover_sharded(eng.devices, parallel=False)
+        st_scalar = recover_sharded(eng.devices, parallel=False, mode="scalar")
+        st_pallas = recover_sharded(eng.devices, parallel=False, mode="pallas")
+        data = st.data
+        assert data == st_scalar.data, seed
+        assert data == st_pallas.data, seed
+        for a, b in zip(st.shards, st_scalar.shards):
+            assert (a.rsne, a.data) == (b.rsne, b.data), seed
+
+        # I1: every acknowledged txn's writes survive with ssn >= its own
+        for obj, kind in acked:
+            if kind == "s":
+                for k, v in obj.write_set:
+                    got = data.get(k.encode())
+                    assert got is not None and got[1] >= obj.ssn, (seed, k)
+                    if got[1] == obj.ssn:
+                        assert got[0] == v, (seed, k)
+            else:
+                for part in obj.parts:
+                    tab = eng.shards[part.shard].table
+                    for r, v in zip(part.wr_rows.tolist(), part.wr_vals):
+                        got = data.get(tab.key_of(r).encode())
+                        assert got is not None and got[1] >= part.ssn, (seed, r)
+                        if got[1] == part.ssn:
+                            assert got[0] == v, (seed, r)
+
+        # full-quiesce equivalence: flush + drain everything, crash, and
+        # the recovered image must equal live state AND the oracle run
+        eng.quiesce()
+        st_full = recover_sharded(eng.devices, parallel=False)
+        live = eng.to_dict()
+        recovered = st_full.data
+        for kb, (v, s) in recovered.items():
+            assert live[kb] == (v, s), (seed, kb)
+        ovals = {k: v[0] for k, v in oracle_tab.to_dict().items() if v[1] > 0}
+        svals = {k: v[0] for k, v in live.items() if v[1] > 0}
+        assert svals == ovals, seed
+        for devs in eng.devices:
+            for d in devs:
+                d.close()
