@@ -5,11 +5,18 @@ derived from the dry-run artifacts, and persists each benchmark's rows to
 ``BENCH_<name>.json`` at the repo root (machine-readable perf trajectory
 across PRs).  BENCH_FAST=1 shrinks durations for CI.
 
-Usage: ``python benchmarks/run.py [bench_name ...]`` — with arguments, only
-the named benchmarks run (e.g. ``fig5_throughput table23_recovery`` for the
-CI smoke subset).
+Usage: ``python benchmarks/run.py [--list] [--seed N] [bench_name ...]``
+
+* positional names run only those benchmarks (e.g. ``fig5_throughput
+  table23_recovery`` for the CI smoke subset);
+* ``--list`` prints the available benchmark names and exits (the subset CLI
+  is discoverable without reading this file);
+* ``--seed N`` seeds ``random`` and ``numpy`` and exports
+  ``REPRO_BENCH_SEED`` before any benchmark imports, so stochastic
+  workload draws are reproducible across runs/machines.
 """
 
+import argparse
 import os
 import sys
 import time
@@ -17,29 +24,33 @@ import time
 sys.path.insert(0, os.path.dirname(__file__))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+BENCH_NAMES = [
+    "fig5_throughput",
+    "fig6_io_bandwidth",
+    "fig7_commit_latency",
+    "fig8_breakdown",
+    "fig9_scalability",
+    "fig10_commit_protocol",
+    "fig_shard_scalability",
+    "fig_replication",
+    "table23_recovery",
+    "roofline",
+]
 
-def main(only=None) -> None:
-    import fig5_throughput
-    import fig6_io_bandwidth
-    import fig7_commit_latency
-    import fig8_breakdown
-    import fig9_scalability
-    import fig10_commit_protocol
-    import fig_shard_scalability
-    import table23_recovery
-    import roofline
 
-    benches = [
-        ("fig5_throughput", fig5_throughput.run),
-        ("fig6_io_bandwidth", fig6_io_bandwidth.run),
-        ("fig7_commit_latency", fig7_commit_latency.run),
-        ("fig8_breakdown", fig8_breakdown.run),
-        ("fig9_scalability", fig9_scalability.run),
-        ("fig10_commit_protocol", fig10_commit_protocol.run),
-        ("fig_shard_scalability", fig_shard_scalability.run),
-        ("table23_recovery", table23_recovery.run),
-        ("roofline", roofline.run),
-    ]
+def main(only=None, seed=None) -> None:
+    if seed is not None:
+        import random
+
+        import numpy as np
+
+        os.environ["REPRO_BENCH_SEED"] = str(seed)
+        random.seed(seed)
+        np.random.seed(seed)
+
+    import importlib
+
+    benches = [(n, importlib.import_module(n).run) for n in BENCH_NAMES]
     if only:
         unknown = set(only) - {n for n, _ in benches}
         if unknown:
@@ -54,4 +65,16 @@ def main(only=None) -> None:
 
 
 if __name__ == "__main__":
-    main(sys.argv[1:])
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("benchmarks", nargs="*",
+                    help="benchmark names to run (default: all)")
+    ap.add_argument("--list", action="store_true",
+                    help="print available benchmark names and exit")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="seed random+numpy (and REPRO_BENCH_SEED) first")
+    args = ap.parse_args()
+    if args.list:
+        print("\n".join(BENCH_NAMES))
+        raise SystemExit(0)
+    main(args.benchmarks, seed=args.seed)

@@ -22,6 +22,7 @@ from .txn import (
     ColumnarLog,
     decode_records,
     decode_columnar,
+    decode_columnar_stream,
     encode_batch,
 )
 
@@ -46,5 +47,6 @@ __all__ = [
     "ColumnarLog",
     "decode_records",
     "decode_columnar",
+    "decode_columnar_stream",
     "encode_batch",
 ]

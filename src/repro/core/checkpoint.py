@@ -29,6 +29,8 @@ import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
+from .par import parallel_for
+
 _U32 = struct.Struct("<I")
 _U64 = struct.Struct("<Q")
 
@@ -186,13 +188,5 @@ def load_latest_checkpoint(directory: str, parallel: bool = True) -> Optional[Ch
                     data[key] = (val, ssn)
 
     files = meta["files"]
-    if parallel and len(files) > 1:
-        threads = [threading.Thread(target=_load, args=(p,)) for p in files]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-    else:
-        for p in files:
-            _load(p)
+    parallel_for(len(files), lambda i: _load(files[i]), parallel)
     return CheckpointData(rsn=meta["rsn"], data=data, files=files)

@@ -1,0 +1,28 @@
+"""One shared thread fan-out for the per-device / per-lane / per-shard
+parallel loops (decode, restore, shipping).
+
+Every consumer used to hand-roll the same spawn/start/join block; keeping
+one copy means the joining and fall-back-to-sequential behaviour is fixed
+in exactly one place.  Workers run under the GIL — these loops parallelize
+IO and zlib/numpy releases, not Python bytecode.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable
+
+
+def parallel_for(n: int, fn: Callable[[int], None], parallel: bool = True) -> None:
+    """Run ``fn(i)`` for ``i in range(n)`` — on one thread per index when
+    ``parallel`` and ``n > 1``, else sequentially.  Joins all threads before
+    returning."""
+    if parallel and n > 1:
+        threads = [threading.Thread(target=fn, args=(i,)) for i in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    else:
+        for i in range(n):
+            fn(i)

@@ -48,6 +48,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from .checkpoint import CheckpointData, load_latest_checkpoint
+from .par import parallel_for
 from .storage import StorageDevice
 from .txn import ColumnarLog, LogRecord, decode_columnar, decode_records
 
@@ -127,18 +128,11 @@ def _replay_scalar(
         return applied, skipped
 
     results: List[Tuple[int, int]] = [(0, 0)] * len(device_records)
-    if parallel and len(device_records) > 1:
-        def _worker(i: int) -> None:
-            results[i] = _replay(device_records[i])
 
-        threads = [threading.Thread(target=_worker, args=(i,)) for i in range(len(device_records))]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-    else:
-        for i, recs in enumerate(device_records):
-            results[i] = _replay(recs)
+    def _worker(i: int) -> None:
+        results[i] = _replay(device_records[i])
+
+    parallel_for(len(device_records), _worker, parallel)
 
     state.n_replayed = sum(r[0] for r in results)
     state.n_skipped_uncommitted = sum(r[1] for r in results)
@@ -397,15 +391,7 @@ def _load_per_device(devices: Sequence[StorageDevice], decode, parallel: bool) -
     def _load(i: int) -> None:
         out[i] = decode(devices[i].read_all())
 
-    if parallel and len(devices) > 1:
-        threads = [threading.Thread(target=_load, args=(i,)) for i in range(len(devices))]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-    else:
-        for i in range(len(devices)):
-            _load(i)
+    parallel_for(len(devices), _load, parallel)
     return out
 
 

@@ -23,6 +23,7 @@ the single logger-thread-per-device binding of the paper.
 
 from __future__ import annotations
 
+import bisect
 import os
 import threading
 import time
@@ -83,6 +84,8 @@ class StorageDevice:
         self.n_writes = 0
         self.busy_time = 0.0       # virtual busy time (seconds)
         self._buf: List[bytes] = []  # in-memory durable image when no path
+        self._buf_starts: List[int] = []  # logical start offset of each chunk
+        self._buf_len = 0
         self._fh = open(path, "ab") if path else None
 
     def write(self, data: bytes) -> None:
@@ -95,22 +98,49 @@ class StorageDevice:
                 os.fsync(self._fh.fileno())
             else:
                 self._buf.append(data)
+                self._buf_starts.append(self._buf_len)
+                self._buf_len += len(data)
             self.bytes_written += len(data)
             self.n_writes += 1
             self.busy_time += t
         if self.clock == "real" and t > 0:
             time.sleep(t)
 
-    def read_all(self) -> bytes:
-        """Return the full durable image (recovery path)."""
+    def size(self) -> int:
+        """Durable byte count (the log's append frontier)."""
         with self._lock:
             if self._fh is not None:
                 self._fh.flush()
-        if self.path is not None:
-            with open(self.path, "rb") as f:
-                return f.read()
+            if self.path is None:
+                return self._buf_len
+        return os.path.getsize(self.path)
+
+    def read_from(self, offset: int) -> bytes:
+        """Durable bytes from ``offset`` to the current frontier.
+
+        The incremental read primitive of log shipping
+        (:class:`repro.replica.LogShipper`): a tailer calls this with its
+        consumed offset and gets only the delta, so repeatedly polling a
+        growing log is O(new bytes), not O(log) per poll (``read_all`` in a
+        loop re-reads the whole image every time).
+        """
         with self._lock:
-            return b"".join(self._buf)
+            if self._fh is not None:
+                self._fh.flush()
+            if self.path is None:
+                if offset >= self._buf_len:
+                    return b""
+                # first chunk whose range covers `offset`
+                i = bisect.bisect_right(self._buf_starts, offset) - 1
+                out = b"".join(self._buf[i:])
+                return out[offset - self._buf_starts[i]:]
+        with open(self.path, "rb") as f:
+            f.seek(offset)
+            return f.read()
+
+    def read_all(self) -> bytes:
+        """Return the full durable image (recovery path)."""
+        return self.read_from(0)
 
     def close(self) -> None:
         if self._fh is not None:

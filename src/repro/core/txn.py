@@ -437,6 +437,55 @@ class ColumnarLog:
     def n_xshard(self) -> int:
         return 0 if self.x_rec is None else len(self.x_rec)
 
+    @staticmethod
+    def concat(parts: Sequence["ColumnarLog"]) -> "ColumnarLog":
+        """Concatenate decoded chunks of one log stream in arrival order —
+        equivalent to decoding the concatenated bytes (incremental tailers
+        decode only new frames and splice the chunks with this)."""
+        parts = [p for p in parts if p.n_records]
+        if not parts:
+            return decode_columnar(b"")
+        if len(parts) == 1:
+            return parts[0]
+        rec_off = np.cumsum([0] + [p.n_records for p in parts])
+        keys: List[bytes] = []
+        values: List[bytes] = []
+        klens: List[int] = []
+        x_rec: List[np.ndarray] = []
+        xp_shard: List[np.ndarray] = []
+        xp_ssn: List[np.ndarray] = []
+        xp_start_parts: List[np.ndarray] = []
+        xp_off = 0
+        for i, p in enumerate(parts):
+            keys.extend(p.keys)
+            values.extend(p.values)
+            klens.extend(p.wr_klen.tolist())
+            if p.x_rec is not None:
+                x_rec.append(p.x_rec + rec_off[i])
+                xp_shard.append(p.xp_shard)
+                xp_ssn.append(p.xp_ssn)
+                xp_start_parts.append(p.xp_start[1:] + xp_off)
+                xp_off += int(p.xp_start[-1])
+        has_x = bool(x_rec)
+        return ColumnarLog(
+            ssn=np.concatenate([p.ssn for p in parts]),
+            tid=np.concatenate([p.tid for p in parts]),
+            has_reads=np.concatenate([p.has_reads for p in parts]),
+            n_writes=np.concatenate([p.n_writes for p in parts]),
+            wr_rec=np.concatenate(
+                [p.wr_rec + rec_off[i] for i, p in enumerate(parts)]
+            ),
+            wr_klen=np.asarray(klens, dtype=np.int64),
+            keys_fixed=ColumnarLog.encode_keys_fixed(keys, klens),
+            keys=keys,
+            values=values,
+            x_rec=np.concatenate(x_rec) if has_x else None,
+            xp_start=np.concatenate([np.zeros(1, np.int64)] + xp_start_parts)
+            if has_x else None,
+            xp_shard=np.concatenate(xp_shard) if has_x else None,
+            xp_ssn=np.concatenate(xp_ssn) if has_x else None,
+        )
+
     def to_records(self) -> List[LogRecord]:
         """Round-trip back to row objects (tests / scalar-oracle interop)."""
         xdeps: Dict[int, List[Tuple[int, int]]] = {}
@@ -470,6 +519,23 @@ def decode_columnar(buf: bytes) -> ColumnarLog:
 
     Same validation as the scalar decoder (length + crc32 per frame, bounds
     checks on every write) so torn-tail semantics are byte-identical.
+    """
+    return decode_columnar_stream(buf)[0]
+
+
+def decode_columnar_stream(buf: bytes) -> Tuple[ColumnarLog, int]:
+    """Incremental-framing variant of :func:`decode_columnar`: returns
+    ``(log, consumed)`` where ``consumed`` is the byte offset of the first
+    frame that did not decode — torn (runs past the end of ``buf``), corrupt
+    (crc mismatch), or truncated mid-payload.
+
+    This is the streaming contract of log shipping
+    (`repro.replica.LogShipper`): on a *live* log a bad trailing frame just
+    means the writer's append has not fully landed yet, so the tailer keeps
+    the bytes from ``consumed`` on and retries once more bytes arrive — it
+    never decodes a partial record.  A crash-recovery caller discards the
+    remainder instead; both behaviours share this one decoder, so shipped
+    and recovered torn-tail semantics are byte-identical.
     """
     ssns: List[int] = []
     tids: List[int] = []
@@ -544,6 +610,16 @@ def decode_columnar(buf: bytes) -> ColumnarLog:
         rec_i += 1
         off = end
 
+    return _columnar_from_lists(
+        ssns, tids, flags_l, nw_l, wr_rec, klens, keys, values,
+        x_rec, xp_start, xp_shard, xp_ssn,
+    ), off
+
+
+def _columnar_from_lists(
+    ssns, tids, flags_l, nw_l, wr_rec, klens, keys, values,
+    x_rec, xp_start, xp_shard, xp_ssn,
+) -> ColumnarLog:
     return ColumnarLog(
         ssn=np.asarray(ssns, dtype=np.int64),
         tid=np.asarray(tids, dtype=np.int64),

@@ -81,12 +81,12 @@ class ArrayTable:
             self.values[row] = value
             return row
 
-    def _insert_locked(self, key: str) -> int:
+    def _insert_locked(self, key: str, kb: Optional[bytes] = None) -> int:
         row = len(self._keys)
         self._grow(row + 1)
         self._index[key] = row
         self._keys.append(key)
-        kb = key.encode()
+        kb = key.encode() if kb is None else kb
         self._keys_b.append(kb)
         self.key_len[row] = len(kb)
         self.values[row] = b""
@@ -111,6 +111,55 @@ class ArrayTable:
                     row = index.get(k)
                     out[i] = self._insert_locked(k) if row is None else row
         return out
+
+    def rows_for_bytes(self, keys: Sequence[bytes]) -> np.ndarray:
+        """Map exact key *bytes* to rows, inserting missing ones — the
+        replica-apply entry (`repro.replica`), where keys arrive as decoded
+        log bytes rather than workload strings.  The string index entry is
+        the utf-8/surrogateescape decoding: for any key a workload wrote
+        through the string API it equals that string exactly (``insert``
+        frames keys as utf-8), so replica point reads find it, and the
+        escape round-trip keeps the mapping injective for arbitrary bytes.
+        :attr:`key_bytes_for`/:meth:`to_dict` keep the exact original
+        bytes."""
+        index = self._index
+        out = np.empty(len(keys), dtype=np.int64)
+        missing: List[Tuple[int, str, bytes]] = []
+        for i, kb in enumerate(keys):
+            k = kb.decode("utf-8", "surrogateescape")
+            row = index.get(k)
+            if row is None:
+                missing.append((i, k, kb))
+                out[i] = -1
+            else:
+                out[i] = row
+        if missing:
+            with self.mutex:
+                for i, k, kb in missing:
+                    row = index.get(k)
+                    out[i] = self._insert_locked(k, kb) if row is None else row
+        return out
+
+    def upsert_bytes(
+        self, keys: Sequence[bytes], vals: np.ndarray, ssns: np.ndarray
+    ) -> None:
+        """Guarded batch upsert by exact key bytes: each (key, value, ssn)
+        lands iff its SSN strictly exceeds the row's current one (the
+        last-writer-wins replay guard).  Row inserts and the fold happen
+        under **one** :attr:`mutex` hold, so a concurrent reader can never
+        observe a freshly-inserted phantom row (``b""``, ssn 0) or a torn
+        (value, ssn) pair — this is the replica applier's fold primitive."""
+        with self.mutex:
+            rows = np.empty(len(keys), dtype=np.int64)
+            index = self._index
+            for i, kb in enumerate(keys):
+                k = kb.decode("utf-8", "surrogateescape")
+                row = index.get(k)
+                rows[i] = self._insert_locked(k, kb) if row is None else row
+            upd = ssns > self.ssn[rows]
+            if upd.any():
+                self.ssn[rows[upd]] = ssns[upd]
+                self.values[rows[upd]] = vals[upd]
 
     def row_of(self, key: str) -> Optional[int]:
         return self._index.get(key)
@@ -176,6 +225,6 @@ class ArrayTable:
         """``key_bytes -> (value, ssn)`` — the :class:`RecoveredState.data`
         shape, for direct comparison against a post-crash recovery."""
         return {
-            key.encode(): (self.values[row], int(self.ssn[row]))
-            for key, row in self._index.items()
+            self._keys_b[row]: (self.values[row], int(self.ssn[row]))
+            for row in self._index.values()
         }

@@ -2,7 +2,7 @@
 first-class framework feature). See manager.py for the txn mapping."""
 
 from .manager import PoplarCheckpointManager, SaveHandle, flatten_state
-from .restore import restore_latest, to_pytree
+from .restore import JournalTails, restore_latest, to_pytree
 
 __all__ = ["PoplarCheckpointManager", "SaveHandle", "flatten_state",
-           "restore_latest", "to_pytree"]
+           "JournalTails", "restore_latest", "to_pytree"]

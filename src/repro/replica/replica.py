@@ -1,0 +1,202 @@
+"""A RAW-safe read replica over one Poplar engine's log devices.
+
+Wires the pieces together:
+
+* one :class:`~repro.replica.shipper.LogShipper` per log device, polled in
+  parallel (no cross-device merge — the point of partially constrained
+  logs);
+* one :class:`~repro.replica.applier.ReplicaApplier` folding shipped chunks
+  into a live :class:`~repro.db.array_table.ArrayTable`;
+* the **read watermark** :meth:`Replica.visible_ssn` — the RSNe rule
+  (``min`` over per-device shipped durable frontiers) driving *visibility*
+  instead of crash recovery: the applier holds every HAS_READS record above
+  it, so a replica read can never observe a transaction whose RAW
+  predecessor has not been applied.  This is the same
+  ``CommitProtocol.committable`` predicate the primary's commit stage uses
+  (Qww: own-device durability; Qwr: ``ssn <= min(DSN)``), re-evaluated on
+  the replica against shipped frontiers;
+* **catch-up** from a fuzzy checkpoint: seed the table from
+  :class:`~repro.core.checkpoint.CheckpointData` and ship the log on top —
+  replay idempotence (per-key SSN guard, checkpoint wins ties via the
+  strict ``>``) makes re-shipping records already reflected in the image
+  harmless, so no log/checkpoint coordination is needed;
+* **promotion**: :meth:`promote` drains whatever has been shipped, applies
+  the recovery consistent cut to it (anything still held is exactly what
+  crash recovery would skip), and returns the servable
+  :class:`~repro.core.recovery.RecoveredState` — byte-identical to
+  ``recover()`` over the same devices.
+
+Runs stepped (tests call :meth:`poll` deterministically) or continuous
+(:meth:`start` spawns a tailer thread), like the engines.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.checkpoint import load_latest_checkpoint
+from ..core.recovery import RecoveredState
+from ..core.storage import StorageDevice
+from ..db.array_table import ArrayTable
+from .applier import GateFn, ReplicaApplier
+from .shipper import LogShipper, ship_all
+
+
+class Replica:
+    """Continuously replicates one engine's devices into a readable table."""
+
+    def __init__(
+        self,
+        devices: Sequence[StorageDevice],
+        checkpoint_dir: Optional[str] = None,
+        mode: str = "vectorized",
+        parallel: bool = True,
+        name: str = "replica",
+    ):
+        self.parallel = parallel
+        self.shippers = [LogShipper(d, i) for i, d in enumerate(devices)]
+        self.table = ArrayTable(name=name)
+        self.applier = ReplicaApplier(self.table, mode=mode)
+        self.rsns = 0
+        self.promoted = False
+        self._watermark = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        if checkpoint_dir is not None:
+            ckpt = load_latest_checkpoint(checkpoint_dir, parallel=parallel)
+            if ckpt is not None:
+                self.rsns = ckpt.rsn
+                self._seed(ckpt.data)
+
+    def _seed(self, data) -> None:
+        if not data:
+            return
+        rows = self.table.rows_for_bytes(list(data.keys()))
+        self.table.ssn[rows] = np.fromiter(
+            (s for _, s in data.values()), np.int64, len(data)
+        )
+        self.table.values[rows] = np.fromiter(
+            (v for v, _ in data.values()), object, len(data)
+        )
+
+    # --- watermark -----------------------------------------------------------
+    def shipped_frontiers(self) -> List[int]:
+        """Per-device shipped durable frontiers (the replicated DSNs)."""
+        return [s.frontier for s in self.shippers]
+
+    def visible_ssn(self) -> int:
+        """The RAW-safe read watermark: every transaction with reads and
+        ``ssn <= visible_ssn()`` is applied — the shipped prefix's RSNe.
+        Monotone in polls.
+
+        On a standalone replica no HAS_READS transaction *above* the
+        watermark is applied either.  Inside a :class:`ShardedReplica` that
+        upper bound holds only for ordinary records: a decided cross-shard
+        HAS_READS transaction may apply above this shard's (capped)
+        watermark — its RAW safety is established per participant edge by
+        the live cut, not by this scalar (see `repro.replica.sharded`)."""
+        return self._watermark
+
+    # --- stepped operation ---------------------------------------------------
+    def ship(self, parallel: Optional[bool] = None):
+        """Poll every device shipper (in parallel threads by default);
+        returns the new chunks."""
+        return ship_all(
+            self.shippers,
+            parallel=self.parallel if parallel is None else parallel,
+        )
+
+    def apply(self, new, gate: Optional[GateFn] = None,
+              watermark: Optional[int] = None) -> int:
+        """Advance the watermark and fold pre-shipped chunks.  ``watermark``
+        caps the advance — the sharded replica uses it to keep visibility
+        below undecided cross-shard records."""
+        fr = [s.frontier for s in self.shippers]
+        w = min(fr) if fr else 0
+        if watermark is not None:
+            w = min(w, watermark)
+        if w > self._watermark:
+            self._watermark = w
+        return self.applier.apply(new, self._watermark, gate=gate)
+
+    def poll(self, gate: Optional[GateFn] = None,
+             watermark: Optional[int] = None,
+             parallel: Optional[bool] = None) -> int:
+        """One replication round: ship all devices, advance the watermark,
+        apply everything it admits.  Returns records newly applied."""
+        return self.apply(self.ship(parallel=parallel), gate=gate,
+                          watermark=watermark)
+
+    def lag_bytes(self) -> int:
+        return sum(s.lag_bytes() for s in self.shippers)
+
+    def held(self) -> int:
+        return self.applier.held()
+
+    # --- reads ---------------------------------------------------------------
+    def read(self, key: str) -> Optional[Tuple[bytes, int]]:
+        """(value, ssn) as of the current watermark, or None.  RAW-safe by
+        construction — the applier never folds a HAS_READS record whose
+        predecessors could be missing — and torn-pair-safe: the table mutex
+        makes the (value, ssn) pair atomic against a concurrent apply
+        (``ArrayTable.get`` alone is lockless)."""
+        with self.table.mutex:
+            return self.table.get(key)
+
+    # --- continuous operation ------------------------------------------------
+    def start(self, poll_interval: float = 1e-3) -> None:
+        """Tail continuously from a background thread until :meth:`stop`.
+
+        The loop polls the devices *sequentially* — spawning a thread per
+        device per poll would churn thread create/teardown thousands of
+        times a second against the primary's GIL for reads that are plain
+        byte copies."""
+        self._stop.clear()
+
+        def _loop() -> None:
+            while not self._stop.is_set():
+                if self.poll(parallel=False) == 0:
+                    time.sleep(poll_interval)
+
+        self._thread = threading.Thread(target=_loop, daemon=True,
+                                        name=f"replica-{self.table.name}")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+
+    # --- promotion -----------------------------------------------------------
+    def drain(self, gate: Optional[GateFn] = None,
+              watermark: Optional[int] = None) -> None:
+        """Ship+apply until a full round makes no progress (primary dead or
+        quiesced)."""
+        while True:
+            before = [s.consumed for s in self.shippers]
+            applied = self.poll(gate=gate, watermark=watermark)
+            if applied == 0 and [s.consumed for s in self.shippers] == before:
+                return
+
+    def promote(self) -> RecoveredState:
+        """Turn the replica into a servable primary state: drain whatever is
+        still shippable, then run the recovery consistent cut on it — the
+        records still held (HAS_READS above the final RSNe) are exactly the
+        durable-but-uncommitted ones crash recovery skips.  The result is
+        byte-identical to ``recover(devices)`` over the same device state.
+        """
+        self.stop()
+        self.drain()
+        self.promoted = True
+        return RecoveredState(
+            data=self.table.to_dict(),
+            rsns=self.rsns,
+            rsne=self._watermark,
+            n_replayed=self.applier.n_applied,
+            n_skipped_uncommitted=self.applier.held(),
+        )

@@ -28,13 +28,13 @@ directory per shard and each shard's image joins its replay reduction.
 
 from __future__ import annotations
 
-import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from ..core.checkpoint import load_latest_checkpoint
+from ..core.par import parallel_for
 from ..core.recovery import (
     RecoveredState,
     _replay_scalar,
@@ -159,15 +159,7 @@ def recover_sharded(
     def _load(p: int) -> None:
         shard_logs[p] = [decode_columnar(d.read_all()) for d in shard_devices[p]]
 
-    if parallel and n > 1:
-        threads = [threading.Thread(target=_load, args=(p,)) for p in range(n)]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-    else:
-        for p in range(n):
-            _load(p)
+    parallel_for(n, _load, parallel)
 
     rsne = [compute_rsne(logs) for logs in shard_logs]
 

@@ -7,7 +7,13 @@ import time
 import numpy as np
 import pytest
 
-from repro.journal import PoplarCheckpointManager, flatten_state, restore_latest, to_pytree
+from repro.journal import (
+    JournalTails,
+    PoplarCheckpointManager,
+    flatten_state,
+    restore_latest,
+    to_pytree,
+)
 from repro.journal.records import decode_array, encode_array, join_slices, parse_key, split_slices
 
 
@@ -132,6 +138,70 @@ def test_marker_blocks_on_lagging_lane(tmp_path):
         assert mgr.last_committed_step() == 0
     finally:
         mgr.close()
+
+
+def test_incremental_restore_with_tails(tmp_path):
+    """Repeated restores through one :class:`JournalTails` read only the
+    bytes appended since the previous probe (no O(n²) lane re-reads) and
+    agree with a cold full restore after every step."""
+    mgr = PoplarCheckpointManager(str(tmp_path), n_lanes=2, device_kind="ssd",
+                                  flush_interval=1e-3)
+    tails = JournalTails()
+    for step in range(3):
+        mgr.save(step, _state(step)).wait()
+        mgr.wait_for_commit(step, timeout=30)
+        inc = restore_latest(str(tmp_path), tails=tails)
+        full = restore_latest(str(tmp_path))
+        assert inc is not None and full is not None
+        assert inc[0] == full[0] == step and inc[2] == full[2]
+        assert inc[1].keys() == full[1].keys()
+        for k in inc[1]:
+            np.testing.assert_array_equal(inc[1][k], full[1][k])
+    mgr.close()
+    # every lane was decoded exactly once end-to-end: the tailers' shipped
+    # record totals equal the lanes' record counts (nothing re-decoded)
+    from repro.core import decode_columnar
+
+    for path, sh in tails._shippers.items():
+        with open(path, "rb") as f:
+            assert sh.n_shipped == decode_columnar(f.read()).n_records
+        assert sh.consumed == os.path.getsize(path)
+
+
+def test_journal_tails_concurrent_probes(tmp_path):
+    """Concurrent lane() calls on one JournalTails must not double-consume:
+    the per-lane lock makes poll+splice atomic, so the tailer ends exactly
+    at the file frontier having decoded each record once."""
+    import threading
+
+    from repro.core import Txn, decode_columnar
+
+    path = os.path.join(str(tmp_path), "log_0.bin")
+    tails = JournalTails()
+
+    def writer():
+        for i in range(50):
+            t = Txn(tid=i, write_set=[(f"k{i}", b"v" * (i % 7))])
+            t.ssn = i + 1
+            with open(path, "ab") as f:
+                f.write(t.encode())
+
+    open(path, "wb").close()
+    threads = [threading.Thread(target=writer)] + [
+        threading.Thread(target=lambda: [tails.lane(path) for _ in range(40)])
+        for _ in range(3)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    final = tails.lane(path)
+    with open(path, "rb") as f:
+        blob = f.read()
+    want = decode_columnar(blob)
+    assert final.n_records == want.n_records == 50
+    sh = tails._shippers[path]
+    assert sh.consumed == len(blob) and sh.n_shipped == 50
 
 
 def test_columnar_restore_matches_scan_oracle(tmp_path):

@@ -1,0 +1,346 @@
+"""Replica correctness: live shipping + continuous apply must end exactly
+where crash recovery ends, and the read watermark must be RAW-safe.
+
+* **promote ≡ recover**: after shipping whatever a (possibly torn, possibly
+  partially flushed) primary left behind, ``Replica.promote()`` must be
+  byte-identical to ``recover()`` on the same devices — data incl. SSNs,
+  RSNe, replayed/skipped counts — for all three apply modes, single-shard
+  and 2-shard (vs ``recover_sharded``, including the cross-shard cut
+  statistics).
+* **watermark monotonicity / RAW safety**: ``visible_ssn()`` never
+  decreases, and no HAS_READS record is ever applied above the watermark it
+  was applied under (`ReplicaApplier.max_qwr_applied`).
+* **catch-up**: a replica seeded from a fuzzy checkpoint and shipped the
+  full log promotes to the same state as checkpoint+log crash recovery.
+"""
+
+import os
+import random
+
+import pytest
+
+from repro.core import EngineConfig, PoplarEngine, Txn, Worker, recover
+from repro.core.checkpoint import CheckpointDaemon
+from repro.core.recovery import RecoveredState
+from repro.db import TxnSpec
+from repro.replica import Replica, ShardedReplica
+from repro.shard import ShardedConfig, ShardedEngine, recover_sharded
+
+KEYS = [f"k{i}" for i in range(10)]
+
+
+class _Cell:
+    __slots__ = ("ssn",)
+
+    def __init__(self):
+        self.ssn = 0
+
+
+def _states_equal(a: RecoveredState, b: RecoveredState) -> bool:
+    return (
+        a.data == b.data
+        and a.rsns == b.rsns
+        and a.rsne == b.rsne
+        and a.n_replayed == b.n_replayed
+        and a.n_skipped_uncommitted == b.n_skipped_uncommitted
+    )
+
+
+def _drive_primary(engine, rng, n_txns, workers, cells, replica=None):
+    """Random mixed workload with random partial flushes; polls the replica
+    mid-stream (checking watermark monotonicity + RAW safety) if given."""
+    wm_prev = 0
+    for i in range(n_txns):
+        reads = rng.sample(KEYS, rng.randrange(0, 3))
+        writes = rng.sample(KEYS, rng.randrange(0, 3))
+        t = Txn(
+            tid=1000 + i,
+            read_set=[(k, cells[k].ssn) for k in reads],
+            write_set=[(k, f"{i}/{k}".encode()) for k in writes],
+        )
+        workers[rng.randrange(len(workers))].run(
+            t, [cells[k] for k in reads], [cells[k] for k in writes]
+        )
+        if rng.random() < 0.4:
+            for b in range(len(engine.buffers)):
+                if rng.random() < 0.6:
+                    engine.logger_tick(b, force=True)
+        if replica is not None and rng.random() < 0.4:
+            replica.poll()
+            wm = replica.visible_ssn()
+            assert wm >= wm_prev, "visible_ssn must be monotone"
+            assert replica.applier.max_qwr_applied <= wm, (
+                "a HAS_READS record was applied above the read watermark"
+            )
+            wm_prev = wm
+
+
+@pytest.mark.parametrize("mode", ["vectorized", "pallas", "scalar"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_promote_equals_recover_single(mode, seed, tmp_path):
+    rng = random.Random(seed)
+    n_buffers = rng.choice([1, 2, 3])
+    engine = PoplarEngine(
+        EngineConfig(n_buffers=n_buffers, device_kind="null", device_dir=str(tmp_path))
+    )
+    workers = [Worker(engine, i) for i in range(n_buffers * 2)]
+    cells = {k: _Cell() for k in KEYS}
+    rep = Replica(engine.devices, mode=mode, parallel=False)
+    _drive_primary(engine, rng, 80, workers, cells, replica=rep)
+    # crash: whatever was never flushed is lost
+    for d in engine.devices:
+        d.close()
+
+    st = rep.promote()
+    ref = recover(engine.devices, parallel=False)
+    assert _states_equal(st, ref)
+    # the replica used the incremental read path, not repeated full reads
+    assert all(s.n_polls > 1 for s in rep.shippers)
+
+
+def test_raw_safety_deterministic(tmp_path):
+    """Qwr visibility is pinned by the *lagging* device: a RAW-carrying
+    record on a flushed buffer must stay invisible until every other device
+    frontier passes it — then it appears."""
+    engine = PoplarEngine(
+        EngineConfig(n_buffers=2, device_kind="null", device_dir=str(tmp_path))
+    )
+    w = Worker(engine, 0)  # -> buffer 0; buffer 1 idle
+    cells = {"a": _Cell(), "b": _Cell()}
+    t1 = Txn(tid=1, write_set=[("a", b"v1")])
+    w.run(t1, [], [cells["a"]])
+    t2 = Txn(tid=2, read_set=[("a", cells["a"].ssn)], write_set=[("b", b"v2")])
+    w.run(t2, [cells["a"]], [cells["b"]])
+
+    engine.logger_tick(0, force=True)  # flush buffer 0 only
+    rep = Replica(engine.devices, parallel=False)
+    rep.poll()
+    # write-only t1 visible (durable on its own device = committed)...
+    assert rep.read("a") == (b"v1", t1.ssn)
+    # ...but t2 (RAW on a) is held: device 1's frontier pins the watermark
+    assert rep.visible_ssn() == 0
+    assert rep.read("b") is None and rep.held() >= 1
+
+    engine.logger_tick(1, force=True)  # heartbeat unpins the frontier
+    rep.poll()
+    assert rep.visible_ssn() == t2.ssn
+    assert rep.read("b") == (b"v2", t2.ssn)
+    assert rep.held() == 0
+
+
+def test_non_ascii_keys_readable(tmp_path):
+    """Replica point reads must find keys the primary wrote through the
+    string API regardless of encoding: the applier's bytes->row mapping has
+    to invert the workload's utf-8 framing exactly (regression for the
+    latin-1 index mismatch)."""
+    engine = PoplarEngine(
+        EngineConfig(n_buffers=1, device_kind="null", device_dir=str(tmp_path))
+    )
+    w = Worker(engine, 0)
+    keys = ["café", "naïve", "ascii", "日本"]
+    cells = {k: _Cell() for k in keys}
+    for i, k in enumerate(keys):
+        t = Txn(tid=10 + i, write_set=[(k, f"v-{k}".encode())])
+        w.run(t, [], [cells[k]])
+    engine.logger_tick(0, force=True)
+
+    rep = Replica(engine.devices, parallel=False)
+    rep.poll()
+    for k in keys:
+        got = rep.read(k)
+        assert got is not None and got[0] == f"v-{k}".encode(), k
+    assert rep.table.to_dict().keys() == {k.encode() for k in keys}
+
+
+def test_replica_checkpoint_catchup(tmp_path):
+    """Seed from a fuzzy checkpoint, ship the log on top: promote must equal
+    checkpoint+log crash recovery (checkpoint wins its SSN ties)."""
+    rng = random.Random(3)
+    engine = PoplarEngine(
+        EngineConfig(n_buffers=2, device_kind="null", device_dir=str(tmp_path / "dev"))
+    )
+    workers = [Worker(engine, i) for i in range(2)]
+    cells = {k: _Cell() for k in KEYS}
+    _drive_primary(engine, rng, 40, workers, cells)
+    engine.quiesce(range(2))
+    for b in range(2):  # heartbeat any lagging buffer so the CSN reaches
+        engine.logger_tick(b, force=True)  # the max observed SSN (ELR rule)
+
+    ck_dir = str(tmp_path / "ckpt")
+    ck = CheckpointDaemon(ck_dir, n_threads=1, m_files=2,
+                          csn_fn=engine.commit.advance_csn)
+    snap = [(k.encode(), f"ck/{k}".encode(), cells[k].ssn) for k in KEYS]
+    ck.run_once([iter(snap)], validate_timeout=5.0)
+
+    _drive_primary(engine, rng, 40, workers, cells)  # post-checkpoint traffic
+    for d in engine.devices:
+        d.close()
+
+    for mode in ("vectorized", "pallas", "scalar"):
+        rep = Replica(engine.devices, checkpoint_dir=ck_dir, mode=mode,
+                      parallel=False)
+        st = rep.promote()
+        ref = recover(engine.devices, checkpoint_dir=ck_dir, parallel=False)
+        assert _states_equal(st, ref), mode
+
+
+def test_replica_torn_tail(tmp_path):
+    """A physically torn trailing frame (crash mid-flush) is retried by the
+    shipper, never decoded — promote still equals recovery, which truncates
+    at the same byte."""
+    engine = PoplarEngine(
+        EngineConfig(n_buffers=2, device_kind="ssd", device_dir=str(tmp_path),
+                     device_clock="virtual")
+    )
+    workers = [Worker(engine, i) for i in range(2)]
+    cells = {k: _Cell() for k in KEYS}
+    _drive_primary(engine, random.Random(5), 30, workers, cells)
+    engine.quiesce(range(2))
+    for d in engine.devices:
+        d.close()
+    torn = Txn(tid=777, write_set=[("k0", b"TORN-NEVER-COMMITTED")])
+    torn.ssn = 1 << 40
+    with open(os.path.join(str(tmp_path), "log_0.bin"), "ab") as f:
+        f.write(torn.encode()[:-7])
+
+    rep = Replica(engine.devices, parallel=False)
+    rep.poll()
+    consumed = rep.shippers[0].consumed
+    rep.poll()  # torn tail retried: consumed must not advance past it
+    assert rep.shippers[0].consumed == consumed
+    st = rep.promote()
+    ref = recover(engine.devices, parallel=False)
+    assert _states_equal(st, ref)
+    assert all(v != b"TORN-NEVER-COMMITTED" for v, _ in st.data.values())
+
+
+def _drive_sharded(eng, rep, rng, rounds, keys, by_shard):
+    for r in range(rounds):
+        specs = [TxnSpec(writes=[(k, f"{k}r{r}".encode())]) for k in keys]
+        specs.append(TxnSpec(
+            writes=[(by_shard[0][0], f"x0r{r}".encode()),
+                    (by_shard[1][0], f"x1r{r}".encode())],
+        ))
+        specs.append(TxnSpec(
+            reads=[by_shard[0][1]],
+            writes=[(by_shard[1][1], f"xr{r}".encode())],
+        ))
+        eng.execute_batch(specs)
+        for sh in eng.shards:
+            for i in range(len(sh.engine.buffers)):
+                if rng.random() < 0.7:
+                    sh.engine.logger_tick(i, force=True)
+        eng.drain()
+        if rep is not None and rng.random() < 0.7:
+            rep.poll()
+
+
+@pytest.mark.parametrize("mode", ["vectorized", "pallas", "scalar"])
+def test_promote_equals_recover_sharded(mode, tmp_path):
+    eng = ShardedEngine(ShardedConfig(
+        n_shards=2, n_buffers=2, n_workers=2, device_kind="null",
+        device_dir=str(tmp_path),
+    ))
+    keys = [f"user{i:06d}" for i in range(20)]
+    by_shard = [[], []]
+    for k in keys:
+        by_shard[eng.shard_of(k)].append(k)
+    rep = ShardedReplica(eng.devices, mode=mode, parallel=False)
+    _drive_sharded(eng, rep, random.Random(11), 6, keys, by_shard)
+    # crash without quiescing: some records unflushed, some cross-shard
+    # transactions may be durable on only one participant
+    for devs in eng.devices:
+        for d in devs:
+            d.close()
+
+    st = rep.promote()
+    ref = recover_sharded(eng.devices, parallel=False)
+    assert (st.n_cross_seen, st.n_cross_dropped) == (
+        ref.n_cross_seen, ref.n_cross_dropped)
+    for p, (a, b) in enumerate(zip(st.shards, ref.shards)):
+        assert _states_equal(a, b), (mode, p)
+    # routed reads serve the merged state
+    for k in keys:
+        got = rep.read(k)
+        want = ref.data.get(k.encode())
+        assert (got == want) or (got is None and want is None)
+
+
+def test_sharded_xshard_held_until_all_participants(tmp_path):
+    """A cross-shard record shipped from one participant only stays
+    invisible (and holds the shard's watermark down for RAW carriers) until
+    the other participant's copy ships."""
+    eng = ShardedEngine(ShardedConfig(
+        n_shards=2, n_buffers=1, n_workers=1, device_kind="null",
+        device_dir=str(tmp_path),
+    ))
+    keys = [f"user{i:06d}" for i in range(8)]
+    by_shard = [[], []]
+    for k in keys:
+        by_shard[eng.shard_of(k)].append(k)
+    k0, k1 = by_shard[0][0], by_shard[1][0]
+    res = eng.execute_batch(
+        [TxnSpec(writes=[(k0, b"x0"), (k1, b"x1")])]
+    )
+    assert len(res.cross) == 1
+    # flush shard 0 only: the x record is durable on one participant
+    eng.shards[0].engine.logger_tick(0, force=True)
+
+    rep = ShardedReplica(eng.devices, parallel=False)
+    rep.poll()
+    assert rep.read(k0) is None and rep.read(k1) is None
+    assert rep.held() >= 1
+
+    eng.shards[1].engine.logger_tick(0, force=True)  # now durable everywhere
+    rep.poll()
+    assert rep.read(k0) == (b"x0", res.cross[0].parts[0].ssn)
+    assert rep.read(k1) == (b"x1", res.cross[0].parts[1].ssn)
+
+
+def test_live_xshard_with_reads_becomes_visible(tmp_path):
+    """A cross-shard HAS_READS transaction, once shipped-durable from every
+    participant, must become visible during *live* polling — and must not
+    starve later single-shard HAS_READS records on its shards (regression:
+    the watermark cap used to block the x-record's own cut decision
+    forever, freezing the shard)."""
+    eng = ShardedEngine(ShardedConfig(
+        n_shards=2, n_buffers=1, n_workers=1, device_kind="null",
+        device_dir=str(tmp_path),
+    ))
+    keys = [f"user{i:06d}" for i in range(8)]
+    by_shard = [[], []]
+    for k in keys:
+        by_shard[eng.shard_of(k)].append(k)
+    k0, k1 = by_shard[0][0], by_shard[1][0]
+    res = eng.execute_batch([TxnSpec(writes=[(k, b"w0") for k in keys])])
+    eng.tick()
+    eng.drain()
+    # a cross-shard txn WITH reads, then an ordinary Qwr behind it
+    xres = eng.execute_batch(
+        [TxnSpec(reads=[k0], writes=[(k0, b"xv0"), (k1, b"xv1")])]
+    )
+    assert len(xres.cross) == 1
+    eng.tick()
+    eng.drain()
+    later = eng.execute_batch(
+        [TxnSpec(reads=[by_shard[0][1]], writes=[(by_shard[0][1], b"later")])]
+    )
+    assert len(later.committed) == 1
+    eng.tick()
+    eng.drain()
+
+    rep = ShardedReplica(eng.devices, parallel=False)
+    for _ in range(4):
+        rep.poll()
+    assert rep.held() == 0, "live polling left decided records held"
+    assert rep.read(k0) == (b"xv0", xres.cross[0].parts[0].ssn)
+    assert rep.read(k1) == (b"xv1", xres.cross[0].parts[1].ssn)
+    assert rep.read(by_shard[0][1])[0] == b"later"
+    # applied gtids are pruned from the live cut registry (O(in-flight),
+    # not O(lifetime)), without losing the seen/dropped statistics
+    assert not rep._info and not rep._durable and rep._seen_x >= 1
+    # and the final state still equals crash recovery
+    st = rep.promote()
+    ref = recover_sharded(eng.devices, parallel=False)
+    for a, b in zip(st.shards, ref.shards):
+        assert _states_equal(a, b)
