@@ -33,6 +33,7 @@ BENCH_NAMES = [
     "fig10_commit_protocol",
     "fig_shard_scalability",
     "fig_replication",
+    "fig_truncation",
     "table23_recovery",
     "roofline",
 ]
@@ -75,6 +76,8 @@ if __name__ == "__main__":
                     help="seed random+numpy (and REPRO_BENCH_SEED) first")
     args = ap.parse_args()
     if args.list:
-        print("\n".join(BENCH_NAMES))
+        # stable-sorted so CI diffs of the listing are deterministic and
+        # independent of the run-order grouping above
+        print("\n".join(sorted(BENCH_NAMES)))
         raise SystemExit(0)
     main(args.benchmarks, seed=args.seed)

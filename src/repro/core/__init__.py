@@ -14,8 +14,13 @@ Public surface:
 from .engine import EngineConfig, LoggingEngine, PoplarEngine, Worker
 from .variants import CentrEngine, NvmDEngine, SiloEngine
 from .recovery import RecoveredState, recover, replay_columnar
-from .checkpoint import CheckpointDaemon, load_latest_checkpoint
-from .storage import DeviceSpec, StorageDevice, make_devices
+from .checkpoint import (
+    CheckpointDaemon,
+    load_latest_checkpoint,
+    load_latest_checkpoint_meta,
+)
+from .storage import DeviceSpec, StorageDevice, TruncatedLogError, make_devices
+from .truncate import FrontierRegistry, LogTruncator, ShardedLogTruncator
 from .txn import (
     Txn,
     LogRecord,
@@ -39,9 +44,14 @@ __all__ = [
     "RecoveredState",
     "CheckpointDaemon",
     "load_latest_checkpoint",
+    "load_latest_checkpoint_meta",
     "DeviceSpec",
     "StorageDevice",
+    "TruncatedLogError",
     "make_devices",
+    "FrontierRegistry",
+    "LogTruncator",
+    "ShardedLogTruncator",
     "Txn",
     "LogRecord",
     "ColumnarLog",

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import struct
 import threading
 import time
@@ -30,6 +31,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .par import parallel_for
+
+_META_RE = re.compile(r"^ckpt_(\d+)\.meta\.json$")
 
 _U32 = struct.Struct("<I")
 _U64 = struct.Struct("<Q")
@@ -131,11 +134,20 @@ class CheckpointDaemon:
                     os.fsync(f.fileno())
                 files[i].append(path)
 
-        threads = [threading.Thread(target=_worker, args=(i,)) for i in range(self.n_threads)]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
+        # parallel_for propagates worker exceptions after joining everyone:
+        # a dead writer must abort the whole checkpoint *before* the metadata
+        # publish below, or a partial file set gets blessed as valid
+        try:
+            parallel_for(self.n_threads, _worker, parallel=True)
+        except BaseException:
+            # best-effort cleanup of the partial epoch; never publish meta
+            for fs in files:
+                for p in fs:
+                    try:
+                        os.remove(p)
+                    except OSError:
+                        pass
+            raise
 
         # ELR validity: wait until CSN passes every observed SSN
         needed = max(max_observed) if max_observed else 0
@@ -163,15 +175,36 @@ class CheckpointDaemon:
         return meta_path
 
 
-def load_latest_checkpoint(directory: str, parallel: bool = True) -> Optional[CheckpointData]:
-    """Load the newest complete checkpoint (recovery stage 1)."""
+def load_latest_checkpoint_meta(directory: str) -> Optional[dict]:
+    """Metadata of the newest complete checkpoint, or None.
+
+    "Newest" means the largest *numeric* epoch: the filenames are
+    ``ckpt_{epoch}.meta.json`` and a lexicographic sort would rank epoch
+    ``999`` above ``1000`` (shorter string, bigger leading digit), making
+    recovery replay from a stale RSN once epochs cross a digit boundary.
+
+    This is also the cheap probe the log truncator polls (it needs the
+    ``rsn``/``epoch`` watermarks, never the tuple image).
+    """
     if not os.path.isdir(directory):
         return None
-    metas = sorted(p for p in os.listdir(directory) if p.endswith(".meta.json"))
-    if not metas:
+    epochs = []
+    for p in os.listdir(directory):
+        m = _META_RE.match(p)
+        if m:
+            epochs.append((int(m.group(1)), p))
+    if not epochs:
         return None
-    with open(os.path.join(directory, metas[-1])) as f:
-        meta = json.load(f)
+    _, newest = max(epochs)
+    with open(os.path.join(directory, newest)) as f:
+        return json.load(f)
+
+
+def load_latest_checkpoint(directory: str, parallel: bool = True) -> Optional[CheckpointData]:
+    """Load the newest complete checkpoint (recovery stage 1)."""
+    meta = load_latest_checkpoint_meta(directory)
+    if meta is None:
+        return None
     data: Dict[bytes, Tuple[bytes, int]] = {}
     lock = threading.Lock()
 

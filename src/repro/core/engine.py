@@ -40,6 +40,10 @@ class EngineConfig:
     device_dir: Optional[str] = None          # None => in-memory durable image
     device_clock: str = "real"                # 'real' | 'virtual'
     logger_poll: float = 2e-4                 # logger idle poll
+    # roll the device's active tail into an immutable sealed segment once it
+    # exceeds this many bytes (the unit `core.truncate.LogTruncator` drops
+    # and recovery decodes in parallel); None = seal only on truncator passes
+    segment_bytes: Optional[int] = None
 
     @staticmethod
     def nvm(n_buffers: int = 2, device_dir: Optional[str] = None) -> "EngineConfig":
@@ -277,6 +281,14 @@ class PoplarEngine(LoggingEngine):
         n = buf.flush_ready(self.devices[i])
         if n:
             self._last_force[i] = time.perf_counter()
+            if self.cfg.segment_bytes:
+                dev = self.devices[i]
+                if dev.tail_bytes() >= self.cfg.segment_bytes:
+                    # flush_lock keeps further flushes out between reading
+                    # the DSN and renaming the tail, so the sealed segment's
+                    # last_ssn stamp matches its bytes exactly
+                    with buf.flush_lock:
+                        dev.seal(buf.dsn)
         self.commit.advance_csn()
         return n
 

@@ -50,7 +50,13 @@ import numpy as np
 from .checkpoint import CheckpointData, load_latest_checkpoint
 from .par import parallel_for
 from .storage import StorageDevice
-from .txn import ColumnarLog, LogRecord, decode_columnar, decode_records
+from .txn import (
+    ColumnarLog,
+    LogRecord,
+    decode_columnar,
+    decode_columnar_stream,
+    decode_records,
+)
 
 
 @dataclass
@@ -74,19 +80,37 @@ class RecoveredState:
 
 def compute_rsne(
     device_records: Sequence[Union[Sequence[LogRecord], ColumnarLog]],
+    floors: Optional[Sequence[int]] = None,
 ) -> int:
     """min over devices of the most recently durable record's SSN.
 
     Accepts either row-decoded logs (``List[LogRecord]``) or columnar logs.
+
+    ``floors`` (aligned with ``device_records``) carries each device's
+    truncation floor (:attr:`~repro.core.storage.StorageDevice.truncated_ssn`):
+    a device whose retained suffix is empty because *everything* durable was
+    truncated away did advance its DSN to the newest dropped segment's last
+    SSN — without the floor it would pin RSNe to 0 and recovery would skip
+    every committed Qwr record on the other devices.  (A truncated device
+    with a non-empty suffix needs no correction: its newest record is still
+    its true frontier.)
     """
     rsne = None
-    for recs in device_records:
+    for i, recs in enumerate(device_records):
         if isinstance(recs, ColumnarLog):
             last = recs.last_ssn
         else:
             last = recs[-1].ssn if recs else 0
+        if floors is not None:
+            last = max(last, floors[i])
         rsne = last if rsne is None else min(rsne, last)
     return rsne or 0
+
+
+def device_ssn_floors(devices: Sequence[StorageDevice]) -> List[int]:
+    """Per-device truncation floors for :func:`compute_rsne` (0 for devices
+    that were never truncated, or device-likes without the attribute)."""
+    return [int(getattr(d, "truncated_ssn", 0)) for d in devices]
 
 
 # --- scalar replay (correctness oracle) --------------------------------------
@@ -395,6 +419,49 @@ def _load_per_device(devices: Sequence[StorageDevice], decode, parallel: bool) -
     return out
 
 
+def load_columnar_segmented(
+    devices: Sequence[StorageDevice], parallel: bool
+) -> List[ColumnarLog]:
+    """Segment-parallel columnar decode: every (device, segment) pair decodes
+    on its own thread and the chunks splice back per device in chain order.
+
+    Sealed segments end at record boundaries, so each blob is an independent
+    framed stream; only the tail blob can carry a torn frame, and it is the
+    last chunk, so per-segment truncation semantics equal whole-log decode.
+    Devices without a segment chain (journal lanes, test doubles) fall back
+    to one blob via ``read_all``.
+    """
+    blobs: List[List[bytes]] = [
+        d.read_segment_blobs() if hasattr(d, "read_segment_blobs")
+        else [d.read_all()]
+        for d in devices
+    ]
+    flat = [(di, si) for di, bs in enumerate(blobs) for si in range(len(bs))]
+    decoded: List[Optional[Tuple[ColumnarLog, int]]] = [None] * len(flat)
+
+    def _decode(j: int) -> None:
+        di, si = flat[j]
+        decoded[j] = decode_columnar_stream(blobs[di][si])
+
+    parallel_for(len(flat), _decode, parallel)
+
+    out: List[ColumnarLog] = []
+    j = 0
+    for bs in blobs:
+        chunk = decoded[j : j + len(bs)]
+        j += len(bs)
+        # a blob that did not fully decode ends this device's stream: a
+        # whole-log decode would stop at that frame too (only the final,
+        # tail blob can legitimately end torn)
+        keep: List[ColumnarLog] = []
+        for (log, consumed), blob in zip(chunk, bs):
+            keep.append(log)
+            if consumed < len(blob):
+                break
+        out.append(keep[0] if len(keep) == 1 else ColumnarLog.concat(keep))
+    return out
+
+
 def recover(
     devices: Sequence[StorageDevice],
     checkpoint_dir: Optional[str] = None,
@@ -406,8 +473,16 @@ def recover(
     ``mode`` selects the replay engine: ``"vectorized"`` (default, batched
     numpy last-writer-wins), ``"pallas"`` (batched + Pallas scatter-max
     apply), or ``"scalar"`` (the per-record oracle).  All modes are
-    equivalent; ``parallel`` controls per-device decode threading (and, for
-    the scalar mode, per-device replay threading).
+    equivalent; ``parallel`` controls decode threading — the vectorized
+    paths decode per (device, sealed segment) pair, so a long-lived
+    segmented log fans decode wider than one thread per device — and, for
+    the scalar mode, per-device replay threading.
+
+    Truncated logs (see `repro.core.truncate.LogTruncator`) recover from
+    ``(checkpoint image, retained log suffix)``: pass the ``checkpoint_dir``
+    the truncator was anchored to — its image covers everything the dropped
+    segments held, and fully-truncated devices contribute their persisted
+    ``truncated_ssn`` floor to RSNe instead of pinning it to 0.
     """
     if mode not in ("vectorized", "pallas", "scalar"):
         raise ValueError(f"unknown recovery mode {mode!r}")
@@ -422,14 +497,15 @@ def recover(
         state.data.update(ckpt.data)
 
     # --- stage 2: log recovery --------------------------------------------
+    floors = device_ssn_floors(devices)
     if mode == "scalar":
         device_records = _load_per_device(devices, decode_records, parallel)
-        state.rsne = compute_rsne(device_records)
+        state.rsne = compute_rsne(device_records, floors=floors)
         _replay_scalar(state, device_records, state.rsne, parallel)
         return state
 
-    logs: List[ColumnarLog] = _load_per_device(devices, decode_columnar, parallel)
-    state.rsne = compute_rsne(logs)
+    logs: List[ColumnarLog] = load_columnar_segmented(devices, parallel)
+    state.rsne = compute_rsne(logs, floors=floors)
     data, n_replayed, n_skipped = replay_columnar(
         logs, state.rsne, base=state.data or None, use_kernel=(mode == "pallas")
     )

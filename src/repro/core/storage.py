@@ -19,16 +19,48 @@ Every device supports two clock modes:
 
 Write calls are serialized per device (a device has one head); this models
 the single logger-thread-per-device binding of the paper.
+
+Log lifecycle (§5 applied to the devices): a device is a chain of immutable
+**sealed segments** plus one active **tail**, all addressed by *logical*
+offsets that never move — ``read_from``/``size`` and the whole SSN machinery
+are oblivious to where a byte physically lives.  :meth:`StorageDevice.seal`
+freezes the tail into a sealed segment (stamped with the SSN of its last
+record, which the caller — the logger, who owns the DSN — supplies);
+:meth:`StorageDevice.truncate_to_ssn` atomically drops the prefix of sealed
+segments whose records all fall at or below a safe SSN (the checkpoint-
+anchored point `repro.core.truncate.LogTruncator` computes).  A reader
+asking for truncated bytes gets :class:`TruncatedLogError` — a hole is an
+error, never silently empty — and recovers via checkpoint catch-up
+(`repro.replica.replica.Replica`).  Path-backed devices persist the chain in
+a ``<path>.segments.json`` manifest (written atomically) so a reopened
+device knows its base offset and RSNe floor across a real crash.
 """
 
 from __future__ import annotations
 
 import bisect
+import json
 import os
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
+
+
+class TruncatedLogError(Exception):
+    """A read asked for log bytes below the device's truncation point.
+
+    Raised instead of returning a hole: the caller (a lagging log shipper, a
+    stale journal tailer) must re-base from a checkpoint — the dropped bytes
+    are, by the truncator's safe-point rule, fully covered by it.
+    """
+
+    def __init__(self, offset: int, base: int):
+        super().__init__(
+            f"log offset {offset} predates the truncation point {base}"
+        )
+        self.offset = offset
+        self.base = base
 
 
 @dataclass
@@ -63,6 +95,35 @@ class DeviceSpec:
         return self.latency_s + nbytes / self.bandwidth_bytes_per_s
 
 
+@dataclass
+class LogSegment:
+    """One immutable sealed segment of a device log.
+
+    ``start``/``end`` are logical byte offsets (``end`` exclusive);
+    ``last_ssn`` is the SSN of the newest record the segment holds — because
+    per-device SSNs are monotone in flush order, ``last_ssn <= safe`` means
+    *every* record in the segment is at or below ``safe``, which is the whole
+    truncation decision.  Sealing happens at flushed record boundaries only,
+    so a sealed segment always holds complete frames.
+    """
+
+    start: int
+    end: int
+    last_ssn: int
+    path: Optional[str] = None            # backing file (path-backed devices)
+    chunks: List[bytes] = field(default_factory=list)  # in-memory devices
+
+    @property
+    def nbytes(self) -> int:
+        return self.end - self.start
+
+    def read(self) -> bytes:
+        if self.path is not None:
+            with open(self.path, "rb") as f:
+                return f.read()
+        return b"".join(self.chunks)
+
+
 class StorageDevice:
     """An append-only log device with emulated timing.
 
@@ -83,11 +144,69 @@ class StorageDevice:
         self.bytes_written = 0
         self.n_writes = 0
         self.busy_time = 0.0       # virtual busy time (seconds)
-        self._buf: List[bytes] = []  # in-memory durable image when no path
+        # --- segment chain state ------------------------------------------
+        self._sealed: List[LogSegment] = []
+        self._tail_start = 0       # logical offset of the tail's first byte
+        self._tail_bytes = 0       # bytes in the active tail
+        # lifecycle watermarks, persisted in the manifest: the last SSN and
+        # byte count ever dropped by truncation.  ``truncated_ssn`` is this
+        # device's RSNe floor — with the whole log truncated away, the last
+        # durable record's SSN is exactly the newest dropped segment's.
+        self.truncated_ssn = 0
+        self.truncated_bytes = 0
+        self.n_seals = 0
+        self.n_truncations = 0
+        self._buf: List[bytes] = []  # in-memory tail chunks when no path
         self._buf_starts: List[int] = []  # logical start offset of each chunk
-        self._buf_len = 0
-        self._fh = open(path, "ab") if path else None
+        if path is not None:
+            self._load_manifest()
+            self._fh = open(path, "ab")
+            self._tail_bytes = os.path.getsize(path)
+        else:
+            self._fh = None
 
+    # --- manifest (path-backed persistence of the segment chain) ----------
+    def _manifest_path(self) -> str:
+        return self.path + ".segments.json"
+
+    def _load_manifest(self) -> None:
+        try:
+            with open(self._manifest_path()) as f:
+                m = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return
+        self._tail_start = m["tail_start"]
+        self.truncated_ssn = m.get("truncated_ssn", 0)
+        self.truncated_bytes = m.get("truncated_bytes", 0)
+        self._sealed = [
+            LogSegment(s["start"], s["end"], s["last_ssn"], path=s["path"])
+            for s in m["sealed"]
+        ]
+
+    def _write_manifest(self) -> None:
+        """Atomically publish the chain (sealed list + tail base).  Called
+        under the device lock, on every seal/truncate.  Crash ordering: the
+        manifest is renamed into place *before* sealed files are unlinked, so
+        a crash can orphan a data file (harmless, rediscovery is manifest-
+        driven) but never reference a missing one."""
+        m = {
+            "tail_start": self._tail_start,
+            "truncated_ssn": self.truncated_ssn,
+            "truncated_bytes": self.truncated_bytes,
+            "sealed": [
+                {"start": s.start, "end": s.end, "last_ssn": s.last_ssn,
+                 "path": s.path}
+                for s in self._sealed
+            ],
+        }
+        tmp = self._manifest_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(m, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, self._manifest_path())
+
+    # --- write path --------------------------------------------------------
     def write(self, data: bytes) -> None:
         """Durably append ``data``. Blocks for the emulated device time."""
         t = self.spec.write_time(len(data))
@@ -98,22 +217,134 @@ class StorageDevice:
                 os.fsync(self._fh.fileno())
             else:
                 self._buf.append(data)
-                self._buf_starts.append(self._buf_len)
-                self._buf_len += len(data)
+                self._buf_starts.append(self._tail_start + self._tail_bytes)
+            self._tail_bytes += len(data)
             self.bytes_written += len(data)
             self.n_writes += 1
             self.busy_time += t
         if self.clock == "real" and t > 0:
             time.sleep(t)
 
+    # --- lifecycle: sealing and truncation ---------------------------------
+    def seal(self, last_ssn: int) -> Optional[LogSegment]:
+        """Freeze the active tail into an immutable sealed segment.
+
+        ``last_ssn`` must be the SSN of the newest record the tail holds —
+        the caller is whoever owns the flush path (the logger's DSN, held
+        consistent under the buffer's flush lock), because the device is
+        byte-oriented and cannot know.  Must only be called at a record
+        boundary (everything flushed so far is complete frames; the engine
+        guarantees this by sealing right after ``flush_ready``).
+
+        Logical offsets are untouched: the new tail starts where the sealed
+        segment ends.  Returns the new segment, or None for an empty tail.
+        """
+        with self._lock:
+            if self._tail_bytes == 0:
+                return None
+            start, end = self._tail_start, self._tail_start + self._tail_bytes
+            if self.path is not None:
+                seg_path = f"{self.path}.seg-{start:020d}"
+                self._fh.close()
+                os.rename(self.path, seg_path)
+                seg = LogSegment(start, end, last_ssn, path=seg_path)
+                self._sealed.append(seg)
+                self._tail_start, self._tail_bytes = end, 0
+                self._fh = open(self.path, "ab")
+                self._write_manifest()
+            else:
+                seg = LogSegment(start, end, last_ssn, chunks=self._buf)
+                self._sealed.append(seg)
+                self._buf, self._buf_starts = [], []
+                self._tail_start, self._tail_bytes = end, 0
+            self.n_seals += 1
+            return seg
+
+    def truncate_to_ssn(
+        self, safe_ssn: int, keep_from: Optional[int] = None
+    ) -> Tuple[int, int]:
+        """Atomically drop the prefix of sealed segments whose records are
+        all at or below ``safe_ssn`` (monotone SSNs make that exactly
+        ``last_ssn <= safe_ssn``).  ``keep_from`` optionally stops earlier —
+        the sharded truncator uses it to pin a segment whose cross-shard
+        records are not yet checkpoint-covered on every participant.
+
+        Only whole sealed segments are ever dropped, never the tail, and
+        only as a prefix — the retained log is always a contiguous,
+        hole-free suffix.  Returns ``(segments_dropped, bytes_dropped)``.
+        """
+        with self._lock:
+            n_drop = 0
+            for i, seg in enumerate(self._sealed):
+                if seg.last_ssn > safe_ssn:
+                    break
+                if keep_from is not None and i >= keep_from:
+                    break
+                n_drop = i + 1
+            if n_drop == 0:
+                return 0, 0
+            dropped, self._sealed = self._sealed[:n_drop], self._sealed[n_drop:]
+            nbytes = sum(s.nbytes for s in dropped)
+            self.truncated_ssn = dropped[-1].last_ssn
+            self.truncated_bytes += nbytes
+            self.n_truncations += 1
+            if self.path is not None:
+                # manifest first: a crash mid-unlink leaves orphan files the
+                # manifest no longer references, never dangling references
+                self._write_manifest()
+                for s in dropped:
+                    try:
+                        os.remove(s.path)
+                    except OSError:
+                        pass
+            return n_drop, nbytes
+
+    def base_offset(self) -> int:
+        """Logical offset of the oldest retained byte (the truncation point)."""
+        with self._lock:
+            return self._base_locked()
+
+    def _base_locked(self) -> int:
+        return self._sealed[0].start if self._sealed else self._tail_start
+
+    def segments(self) -> List[Tuple[int, int, int]]:
+        """``(start, end, last_ssn)`` of every sealed segment (tail excluded)."""
+        with self._lock:
+            return [(s.start, s.end, s.last_ssn) for s in self._sealed]
+
+    def read_sealed_blob(self, index: int) -> Optional[bytes]:
+        """Bytes of the ``index``-th sealed segment, or None if the chain
+        shrank (a concurrent truncation) — the lazy single-segment read the
+        sharded truncator uses to inspect only droppable candidates."""
+        with self._lock:
+            if index >= len(self._sealed):
+                return None
+            return self._sealed[index].read()
+
+    def tail_bytes(self) -> int:
+        """Bytes in the active (unsealed) tail."""
+        with self._lock:
+            return self._tail_bytes
+
+    def disk_bytes(self) -> int:
+        """Bytes the device currently retains (sealed chain + tail) — the
+        on-disk footprint truncation bounds."""
+        with self._lock:
+            return sum(s.nbytes for s in self._sealed) + self._tail_bytes
+
+    # --- read path ---------------------------------------------------------
     def size(self) -> int:
-        """Durable byte count (the log's append frontier)."""
+        """Durable byte count (the log's logical append frontier).
+
+        Computed entirely under the device lock from the internal offset
+        accounting — stat-ing the backing file after releasing the lock
+        raced a concurrent :meth:`write` and could report a frontier that
+        includes a torn in-flight append.
+        """
         with self._lock:
             if self._fh is not None:
                 self._fh.flush()
-            if self.path is None:
-                return self._buf_len
-        return os.path.getsize(self.path)
+            return self._tail_start + self._tail_bytes
 
     def read_from(self, offset: int) -> bytes:
         """Durable bytes from ``offset`` to the current frontier.
@@ -123,24 +354,63 @@ class StorageDevice:
         consumed offset and gets only the delta, so repeatedly polling a
         growing log is O(new bytes), not O(log) per poll (``read_all`` in a
         loop re-reads the whole image every time).
+
+        Raises :class:`TruncatedLogError` when ``offset`` predates the
+        truncation point — the caller's bytes are gone and it must re-base
+        from a checkpoint.
         """
+        # everything — sealed reads *and* the tail read — happens under the
+        # device lock: a concurrent seal() renames the tail file and a
+        # concurrent truncate_to_ssn() unlinks sealed files, so reading
+        # after releasing the lock could splice the *new* (re-opened) tail's
+        # bytes at the old logical offset or hit a vanished path.  Writes
+        # already do their IO under this lock; readers are no different.
         with self._lock:
+            base = self._base_locked()
+            if offset < base:
+                raise TruncatedLogError(offset, base)
             if self._fh is not None:
                 self._fh.flush()
+            parts: List[bytes] = []
+            for seg in self._sealed:
+                if seg.end <= offset:
+                    continue
+                data = seg.read()
+                parts.append(data[max(0, offset - seg.start):])
             if self.path is None:
-                if offset >= self._buf_len:
-                    return b""
-                # first chunk whose range covers `offset`
-                i = bisect.bisect_right(self._buf_starts, offset) - 1
-                out = b"".join(self._buf[i:])
-                return out[offset - self._buf_starts[i]:]
-        with open(self.path, "rb") as f:
-            f.seek(offset)
-            return f.read()
+                if offset > self._tail_start:
+                    i = bisect.bisect_right(self._buf_starts, offset) - 1
+                    if i >= 0:
+                        out = b"".join(self._buf[i:])
+                        parts.append(out[offset - self._buf_starts[i]:])
+                else:
+                    parts.extend(self._buf)
+            else:
+                with open(self.path, "rb") as f:
+                    f.seek(max(0, offset - self._tail_start))
+                    parts.append(f.read())
+            return b"".join(parts)
 
     def read_all(self) -> bytes:
-        """Return the full durable image (recovery path)."""
-        return self.read_from(0)
+        """Return the full retained durable image, i.e. everything from the
+        truncation point on (recovery path)."""
+        return self.read_from(self.base_offset())
+
+    def read_segment_blobs(self) -> List[bytes]:
+        """The retained log as per-segment byte blobs (sealed chain, then
+        tail) — the unit of segment-parallel recovery decode.  Sealed
+        segments hold complete frames, so each blob decodes independently
+        and the decoded chunks concatenate in chain order."""
+        with self._lock:           # see read_from for why IO stays inside
+            if self._fh is not None:
+                self._fh.flush()
+            blobs = [s.read() for s in self._sealed]
+            if self.path is None:
+                blobs.append(b"".join(self._buf))
+            else:
+                with open(self.path, "rb") as f:
+                    blobs.append(f.read())
+            return blobs
 
     def close(self) -> None:
         if self._fh is not None:
@@ -154,6 +424,8 @@ class StorageDevice:
             "n_writes": self.n_writes,
             "busy_time_s": self.busy_time,
             "avg_write_bytes": self.bytes_written / max(1, self.n_writes),
+            "n_sealed_segments": len(self._sealed),
+            "truncated_bytes": self.truncated_bytes,
         }
 
 

@@ -110,6 +110,19 @@ class JournalTails:
                 )
             return self._logs.get(path) or decode_columnar(b"")
 
+    def min_frontier(self) -> int:
+        """Min over lanes of the tailed SSN frontier — this tailer's
+        consumed-through point for a
+        :class:`~repro.core.truncate.FrontierRegistry` (a registered journal
+        tailer keeps the truncator from dropping lane records it has not
+        decoded yet; an *unregistered* one that falls behind re-probes from
+        scratch, which the lifecycle docs call out as the slow path)."""
+        with self._lock:
+            shippers = list(self._shippers.values())
+        if not shippers:
+            return 0
+        return min(sh.frontier for sh in shippers)
+
 
 def load_lanes(directory: str, parallel: bool = True) -> List[List[LogRecord]]:
     return _load_files(_lane_files(directory), decode_records, parallel)

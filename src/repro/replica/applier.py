@@ -88,6 +88,24 @@ class ReplicaApplier:
         """Shipped-but-unapplied records (beyond the watermark / gated out)."""
         return sum(int((~c.applied).sum()) for c in self.pending)
 
+    def prune_below(self, ssn: int) -> int:
+        """Mark every pending record with ``log.ssn <= ssn`` applied without
+        folding it — the truncation-rebase path, where a freshly seeded
+        checkpoint image already reflects those records (the safe-point rule
+        bounds every truncated record by the checkpoint RSN, and the image
+        wins the per-key SSN guard against them).  Returns records pruned.
+        """
+        n = 0
+        for c in self.pending:
+            m = ~c.applied & (c.log.ssn <= ssn)
+            k = int(m.sum())
+            if k:
+                c.applied |= m
+                n += k
+        self.pending = [c for c in self.pending if not c.applied.all()]
+        self.n_applied += n
+        return n
+
     def pending_x_min_ssn(self) -> Optional[int]:
         """Smallest SSN of an unapplied cross-shard record, or None.
 

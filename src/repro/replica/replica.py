@@ -39,11 +39,12 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.checkpoint import load_latest_checkpoint
+from ..core.par import parallel_for
 from ..core.recovery import RecoveredState
-from ..core.storage import StorageDevice
+from ..core.storage import StorageDevice, TruncatedLogError
 from ..db.array_table import ArrayTable
 from .applier import GateFn, ReplicaApplier
-from .shipper import LogShipper, ship_all
+from .shipper import LogShipper
 
 
 class Replica:
@@ -61,7 +62,9 @@ class Replica:
         self.shippers = [LogShipper(d, i) for i, d in enumerate(devices)]
         self.table = ArrayTable(name=name)
         self.applier = ReplicaApplier(self.table, mode=mode)
+        self.checkpoint_dir = checkpoint_dir
         self.rsns = 0
+        self.n_rebases = 0
         self.promoted = False
         self._watermark = 0
         self._stop = threading.Event()
@@ -73,15 +76,49 @@ class Replica:
                 self._seed(ckpt.data)
 
     def _seed(self, data) -> None:
+        """Fold a checkpoint image into the table under the per-key SSN
+        guard (one atomic upsert): sound both at construction and when
+        re-seeding during a truncation rebase over a table that already
+        holds newer applied writes."""
         if not data:
             return
-        rows = self.table.rows_for_bytes(list(data.keys()))
-        self.table.ssn[rows] = np.fromiter(
-            (s for _, s in data.values()), np.int64, len(data)
+        self.table.upsert_bytes(
+            list(data.keys()),
+            np.fromiter((v for v, _ in data.values()), object, len(data)),
+            np.fromiter((s for _, s in data.values()), np.int64, len(data)),
         )
-        self.table.values[rows] = np.fromiter(
-            (v for v, _ in data.values()), object, len(data)
-        )
+
+    # --- truncation re-basing ------------------------------------------------
+    def _rebase(self, cause: TruncatedLogError) -> None:
+        """A shipper's offset predates its device's truncation point: the
+        missing bytes are gone, but the truncator's safe-point rule says the
+        checkpoint that anchored the truncation covers every dropped record.
+        Catch up from it instead of reading the hole: re-seed the table from
+        the newest checkpoint image, then jump every lagging shipper to its
+        device's base offset with the device's persisted ``truncated_ssn``
+        as its new shipped-frontier floor — byte-identical, by the replay
+        idempotence guard, to having shipped the dropped records themselves.
+        """
+        if self.checkpoint_dir is None:
+            raise cause
+        ckpt = load_latest_checkpoint(self.checkpoint_dir,
+                                      parallel=self.parallel)
+        if ckpt is None:
+            raise cause
+        self._seed(ckpt.data)
+        self.rsns = max(self.rsns, ckpt.rsn)
+        for sh in self.shippers:
+            base_fn = getattr(sh.source, "base_offset", None)
+            if base_fn is None:
+                continue
+            base = base_fn()
+            if sh.consumed + len(sh._tail) < base:
+                sh.rebase(base, int(getattr(sh.source, "truncated_ssn", 0)))
+        # shipped-but-held records at or below the checkpoint RSN are fully
+        # reflected by the image just seeded; marking them applied keeps
+        # held() honest and lifts any cross-shard visibility cap they pinned
+        self.applier.prune_below(ckpt.rsn)
+        self.n_rebases += 1
 
     # --- watermark -----------------------------------------------------------
     def shipped_frontiers(self) -> List[int]:
@@ -104,11 +141,34 @@ class Replica:
     # --- stepped operation ---------------------------------------------------
     def ship(self, parallel: Optional[bool] = None):
         """Poll every device shipper (in parallel threads by default);
-        returns the new chunks."""
-        return ship_all(
-            self.shippers,
-            parallel=self.parallel if parallel is None else parallel,
-        )
+        returns the new chunks.  A shipper that fell behind a log truncation
+        re-bases from the checkpoint transparently (see :meth:`_rebase`) and
+        only the *failed* shippers are re-polled: the successful ones
+        already advanced their consumed offsets, so discarding their chunks
+        for a whole-round retry would lose those records forever while the
+        frontiers still covered them."""
+        par = self.parallel if parallel is None else parallel
+        out: List[Optional[object]] = [None] * len(self.shippers)
+        todo = list(range(len(self.shippers)))
+        for attempt in range(4):  # a concurrent truncator pass may race
+            errs: List[Optional[TruncatedLogError]] = [None] * len(self.shippers)
+
+            def _poll(j: int, idx=tuple(todo)) -> None:
+                i = idx[j]
+                try:
+                    out[i] = self.shippers[i].poll()
+                except TruncatedLogError as e:
+                    errs[i] = e
+
+            parallel_for(len(todo), _poll, par)
+            todo = [i for i in range(len(self.shippers)) if errs[i] is not None]
+            if not todo:
+                return out
+            first = next(e for e in errs if e is not None)
+            if attempt == 3:
+                raise first
+            self._rebase(first)
+        return out
 
     def apply(self, new, gate: Optional[GateFn] = None,
               watermark: Optional[int] = None) -> int:

@@ -130,6 +130,23 @@ class ShardedReplica:
             for log in logs:
                 if log is not None:
                     self._ingest(p, log)
+        # checkpoint-image coverage (seeded at construction or by a
+        # truncation rebase inside ship()): a record with ssn <= the shard's
+        # seeded RSN is fully reflected by that image, so it needs no fold —
+        # and a cross-shard record whose *every* participant edge is
+        # image-covered can never be re-decided (all its records were
+        # durable before the checkpoints — see the truncator's coverage
+        # rule), so its registry entry is dead.  Without this, a gtid whose
+        # copy was truncated away on one participant would sit undecided
+        # forever, capping that shard's Qwr visibility below it.
+        for r in self.replicas:
+            if r.rsns:
+                r.applier.prune_below(r.rsns)
+        for g in list(self._info):
+            parts, _ = self._info[g]
+            if all(s <= self.replicas[q].rsns for q, s in parts):
+                del self._info[g]
+                self._durable.pop(g, None)
         frontiers = [
             min(f) if (f := r.shipped_frontiers()) else 0 for r in self.replicas
         ]

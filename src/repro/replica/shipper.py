@@ -81,6 +81,12 @@ class LogShipper:
         still-torn tail).  A corrupt/torn trailing frame is left in place
         and retried next poll — on a crashed primary it simply never
         completes, which is exactly recovery's truncation point.
+
+        Raises :class:`~repro.core.storage.TruncatedLogError` (from the
+        source) when the read offset predates the source's truncation point
+        — the bytes this tailer still needed were dropped by the log
+        truncator, and the owner must :meth:`rebase` it from a checkpoint
+        (`repro.replica.replica.Replica` does this transparently).
         """
         self.n_polls += 1
         new = self.source.read_from(self.consumed + len(self._tail))
@@ -95,6 +101,19 @@ class LogShipper:
         self.frontier = max(self.frontier, log.last_ssn)
         self.n_shipped += log.n_records
         return log
+
+    def rebase(self, offset: int, ssn_floor: int) -> None:
+        """Jump the tailer over a truncation hole: resume reading at
+        ``offset`` (the source's truncation point) and raise the shipped
+        frontier to ``ssn_floor`` (the source's ``truncated_ssn`` — every
+        dropped record's SSN is at or below it).  Only sound when the owner
+        has seeded the skipped records' effects from the checkpoint that
+        anchored the truncation; the safe-point rule guarantees that image
+        covers exactly what was dropped."""
+        assert offset >= self.consumed, "rebase must move forward"
+        self.consumed = offset
+        self._tail = b""
+        self.frontier = max(self.frontier, ssn_floor)
 
     def lag_bytes(self) -> int:
         """Durable bytes at the source not yet decoded (shipping backlog)."""

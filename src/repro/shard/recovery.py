@@ -39,10 +39,12 @@ from ..core.recovery import (
     RecoveredState,
     _replay_scalar,
     compute_rsne,
+    device_ssn_floors,
+    load_columnar_segmented,
     replay_columnar,
 )
 from ..core.storage import StorageDevice
-from ..core.txn import ColumnarLog, LogRecord, decode_columnar, decode_records
+from ..core.txn import ColumnarLog, LogRecord, decode_records
 
 # (participant vector, has_reads) of one cross-shard transaction
 _XInfo = Tuple[List[Tuple[int, int]], bool]
@@ -153,15 +155,19 @@ def recover_sharded(
         return _recover_sharded_scalar(shard_devices, checkpoint_dirs, parallel)
 
     # stage 1: decode every shard's logs (shards in parallel, like the
-    # single-engine path parallelizes over devices)
+    # single-engine path parallelizes over devices; within a shard the
+    # decode is per (device, sealed segment) — see load_columnar_segmented)
     shard_logs: List[List[ColumnarLog]] = [None] * n  # type: ignore[list-item]
 
     def _load(p: int) -> None:
-        shard_logs[p] = [decode_columnar(d.read_all()) for d in shard_devices[p]]
+        shard_logs[p] = load_columnar_segmented(shard_devices[p], parallel=False)
 
     parallel_for(n, _load, parallel)
 
-    rsne = [compute_rsne(logs) for logs in shard_logs]
+    rsne = [
+        compute_rsne(logs, floors=device_ssn_floors(shard_devices[p]))
+        for p, logs in enumerate(shard_logs)
+    ]
 
     # stage 2: the consistent cut over cross-shard records
     durable, info = _collect_cut_columnar(shard_logs)
@@ -206,7 +212,10 @@ def _recover_sharded_scalar(
     shard_recs: List[List[List[LogRecord]]] = [
         [decode_records(d.read_all()) for d in shard_devices[p]] for p in range(n)
     ]
-    rsne = [compute_rsne(recs) for recs in shard_recs]
+    rsne = [
+        compute_rsne(recs, floors=device_ssn_floors(shard_devices[p]))
+        for p, recs in enumerate(shard_recs)
+    ]
 
     durable: Dict[int, Set[int]] = {}
     info: Dict[int, _XInfo] = {}
