@@ -17,7 +17,7 @@ import numpy as np
 from repro.configs.base import reduced
 from repro.configs.registry import get_config
 from repro.models.api import build_model
-from repro.serve.engine import ServeEngine
+from repro.models.serve_llm import ServeEngine
 
 
 def main() -> None:

@@ -29,6 +29,48 @@ def key_of(i: int) -> str:
     return f"user{i:010d}"
 
 
+class Zipfian:
+    """YCSB-standard Zipfian key-index generator (Gray et al., "Quickly
+    Generating Billion-Record Synthetic Databases"): item rank ``r`` is
+    drawn with probability ∝ ``1 / r^theta`` over ``[0, n)``.  ``theta``
+    0.99 is the YCSB default; 0 degenerates to uniform.
+
+    The ``zeta(n)`` normalizer is the one O(n) cost, paid once at
+    construction; draws are O(1).  :meth:`sample` is the vectorized batch
+    twin (same closed form applied to a uniform array — used by the batch
+    workload generators), :meth:`next` the scalar single-txn draw open-loop
+    clients use.  Rank→item identity is left as-is (rank 0 = item 0): the
+    serving-tier skew tests want a *known* hottest key, and callers that
+    need scrambled placement can permute indices themselves.
+    """
+
+    def __init__(self, n: int, theta: float = 0.99, seed: int = 0):
+        assert n >= 2 and 0.0 <= theta < 1.0, "need n >= 2, 0 <= theta < 1"
+        self.n = n
+        self.theta = theta
+        self.rng = np.random.default_rng(seed)
+        ranks = np.arange(1, n + 1, dtype=np.float64)
+        self.zetan = float(np.sum(ranks ** -theta))
+        self.zeta2 = 1.0 + 2.0 ** -theta
+        self.alpha = 1.0 / (1.0 - theta)
+        self.eta = (1.0 - (2.0 / n) ** (1.0 - theta)) / (
+            1.0 - self.zeta2 / self.zetan
+        )
+
+    def sample(self, size: int) -> np.ndarray:
+        """``size`` zipfian item indices in ``[0, n)`` (vectorized)."""
+        u = self.rng.random(size)
+        uz = u * self.zetan
+        spread = self.n * (self.eta * u - self.eta + 1.0) ** self.alpha
+        idx = np.where(
+            uz < 1.0, 0, np.where(uz < self.zeta2, 1, spread.astype(np.int64))
+        )
+        return np.minimum(idx.astype(np.int64), self.n - 1)
+
+    def next(self) -> int:
+        return int(self.sample(1)[0])
+
+
 def load(table, n_records: int = 100_000, seed: int = 7) -> None:
     """Populate ``table`` — any store with ``insert(key, value)``, i.e. the
     dict :class:`Table` or the columnar ``ArrayTable`` interchangeably."""
@@ -38,17 +80,28 @@ def load(table, n_records: int = 100_000, seed: int = 7) -> None:
 
 
 class YCSBWriteOnly:
-    """Write-only workload: update all columns of one tuple."""
+    """Write-only workload: update all columns of one tuple.
 
-    def __init__(self, n_records: int, seed: int = 0):
+    ``theta > 0`` switches key selection from uniform to Zipfian skew
+    (hot-key contention — the serving tier's retry-under-skew workload);
+    0.0 keeps the original uniform draw, byte-compatible with old seeds.
+    """
+
+    def __init__(self, n_records: int, seed: int = 0, theta: float = 0.0):
         self.n_records = n_records
         self.rng = random.Random(seed)
         self._vrng = np.random.default_rng(seed)  # C-speed value payloads
+        self.zipf = Zipfian(n_records, theta, seed=seed) if theta > 0 else None
+
+    def _key_indices(self, n: int) -> np.ndarray:
+        if self.zipf is not None:
+            return self.zipf.sample(n)
+        return self._vrng.integers(0, self.n_records, n)
 
     def next_txn(self, worker: OCCWorker):
-        key = key_of(self.rng.randrange(self.n_records))
+        i = self.zipf.next() if self.zipf else self.rng.randrange(self.n_records)
         value = self.rng.randbytes(N_COLS * COL_BYTES)
-        return worker.execute(reads=[], writes=[(key, value)])
+        return worker.execute(reads=[], writes=[(key_of(i), value)])
 
     def next_batch(self, n: int) -> List[TxnSpec]:
         """``n`` write-only txn specs for the batched executor
@@ -56,11 +109,18 @@ class YCSBWriteOnly:
         value-blob draw sliced per txn, one vectorized key-index draw."""
         nbytes = N_COLS * COL_BYTES
         blob = self._vrng.bytes(n * nbytes)
-        idx = self._vrng.integers(0, self.n_records, n)
+        idx = self._key_indices(n)
         return [
             TxnSpec(writes=[(key_of(k), blob[i * nbytes : (i + 1) * nbytes])])
             for i, k in enumerate(idx.tolist())
         ]
+
+    def next_specs(self, n: int) -> List[TxnSpec]:
+        """Alias of :meth:`next_batch` under the serving-tier name: open-loop
+        clients pre-draw ``n`` single-txn specs and submit them one at a
+        time, so "a batch of specs" and "n client arrivals" are the same
+        draw."""
+        return self.next_batch(n)
 
     def next_batch_indexed(self, n: int):
         """The same batch as index arrays for ``BatchOCC.execute_indexed``:
@@ -75,6 +135,55 @@ class YCSBWriteOnly:
         vlen = np.full(n, nbytes, dtype=np.int64)
         return (np.empty(0, np.int64), np.zeros(n + 1, np.int64),
                 wr_row.astype(np.int64), starts, values, vlen)
+
+
+class RMWSpecFactory:
+    """Read-modify-write specs for the serving tier's retry path.
+
+    Each generated closure reads one (optionally Zipfian-hot) key, records
+    the tuple SSN observed *at build time*, and writes a value derived from
+    the read.  The executor validates the observed SSN, so a spec built
+    before a conflicting winner commits loses validation — exactly the abort
+    the scheduler's retry-with-backoff must absorb.  The scheduler re-invokes
+    the closure on retry, which re-reads the now-current value/SSN, so a
+    retried transaction eventually wins.
+    """
+
+    def __init__(
+        self,
+        table,
+        n_records: int,
+        seed: int = 0,
+        theta: float = 0.99,
+    ):
+        self.table = table  # dict Table (cells) or ArrayTable ((value, ssn))
+        self.n_records = n_records
+        self.rng = random.Random(seed)
+        self.zipf = Zipfian(n_records, theta, seed=seed) if theta > 0 else None
+
+    def _observe(self, key: str) -> Tuple[bytes, int]:
+        got = self.table.get_or_insert(key)
+        if isinstance(got, tuple):
+            return got
+        return got.value, got.ssn
+
+    def spec_fn(self):
+        """One client transaction: a zero-arg closure over a freshly drawn
+        key, usable as ``GroupCommitScheduler.submit(make_spec)`` — every
+        invocation (first attempt and each retry) re-reads the key."""
+        i = self.zipf.next() if self.zipf else self.rng.randrange(self.n_records)
+        key = key_of(i)
+
+        def build() -> TxnSpec:
+            value, ssn = self._observe(key)
+            head = bytes(b ^ 0xFF for b in value[:COL_BYTES])
+            return TxnSpec(
+                reads=[key],
+                writes=[(key, head + value[COL_BYTES:])],
+                observed=[ssn],
+            )
+
+        return build
 
 
 class YCSBHybrid:

@@ -20,7 +20,7 @@ def main(argv=None) -> int:
     from ..configs.base import reduced as make_reduced
     from ..configs.registry import get_config
     from ..models.api import build_model
-    from ..serve.engine import ServeEngine
+    from ..models.serve_llm import ServeEngine
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")

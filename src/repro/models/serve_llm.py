@@ -1,8 +1,11 @@
-"""Batched serving engine: prefill + greedy decode against ring caches.
+"""Batched LLM serving engine: prefill + greedy decode against ring caches.
 
 Works for every registered arch (full attention, SWA, hybrid, rwkv,
 enc-dec).  ``ServeEngine.generate`` processes a batch of prompts in one
 prefill and decodes tokens step by step with jitted ``decode_step``.
+
+(Lives next to the model definitions it drives; ``repro.serve`` hosts the
+OLTP group-commit serving tier, which is unrelated to token generation.)
 """
 
 from __future__ import annotations

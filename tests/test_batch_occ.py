@@ -30,8 +30,16 @@ from repro.db.batch import _concat_ranges
 def _mk_engine(tmp_path, tag: str, n_buffers: int) -> PoplarEngine:
     d = tmp_path / tag
     d.mkdir()
+    # flush_interval is explicit (conftest leaves it alone) and effectively
+    # infinite: heartbeats are wall-clock-gated, and the scalar oracle's
+    # slower per-txn drains would otherwise cross the interval on a slow
+    # machine and heartbeat-bump its buffer SSN chains to the frontier while
+    # the faster batched engine's drains don't — breaking SSN equivalence
+    # nondeterministically.  quiesce() force-ticks at the end, so both
+    # engines still heartbeat/flush identically from identical states.
     return PoplarEngine(
-        EngineConfig(n_buffers=n_buffers, device_kind="null", device_dir=str(d))
+        EngineConfig(n_buffers=n_buffers, device_kind="null",
+                     device_dir=str(d), flush_interval=60.0)
     )
 
 

@@ -104,6 +104,22 @@ def test_param_counts_match_public_sizes():
         assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
 
 
+def test_serve_llm_engine_reduced():
+    """Relocated LLM serving engine (repro.models.serve_llm): one prefill +
+    greedy decode on a reduced config, token bounds + shape."""
+    from repro.models.serve_llm import ServeEngine
+
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, cache_len=48)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)}
+    res = eng.generate(batch, max_new=4)
+    assert res.tokens.shape == (2, 4)
+    assert np.all(res.tokens >= 0) and np.all(res.tokens < cfg.vocab)
+
+
 def test_attn_impl_equivalence_all():
     cfg = reduced(get_config("mixtral-8x22b"))
     base = build_model(dataclasses.replace(cfg, attn_impl="masked_scan"))

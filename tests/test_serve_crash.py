@@ -1,0 +1,142 @@
+"""Crash injection under open-loop serving load.
+
+The serving tier's ack contract is: an acknowledged transaction is durable
+and committable, so it must survive any crash *after* the ack — including a
+mid-flush kill that leaves a torn frame at the device tail (the same
+physical injection as test_crash_injection.py).  The acked set at kill time
+is therefore an exact recovery oracle:
+
+* every ACKED ticket's write is present in the recovered state;
+* no torn-tail or never-flushed ("lost tail") value is ever recovered;
+* un-acked work may or may not have reached the device — no constraint,
+  which is precisely why the ack gate, not execution, is the contract.
+
+One threaded run (real clocks, Poisson open-loop arrivals, kill mid-stream)
+and one deterministic stepped sharded run (partial per-shard flushing, cut
+off mid-drain) — single-shard and cross-shard transactions both covered.
+"""
+
+import os
+import time
+
+from repro.core import EngineConfig, Txn, recover
+from repro.db.batch import TxnSpec
+from repro.db.ycsb import key_of
+from repro.serve import (
+    ACKED,
+    GroupCommitScheduler,
+    ServeConfig,
+    ShardedBackend,
+    SingleBackend,
+)
+from repro.shard import recover_sharded
+
+
+def _torn_record(key: str, cut: int = 7) -> bytes:
+    t = Txn(tid=777777, write_set=[(key, b"TORN-VALUE-NEVER-COMMITTED")])
+    t.ssn = 1 << 40  # would win every last-writer-wins race if replayed
+    rec = t.encode()
+    assert cut < len(rec)
+    return rec[:-cut]
+
+
+def test_open_loop_kill_torn_tail(tmp_path):
+    cfg = EngineConfig(n_buffers=2, device_kind="ssd",
+                       device_dir=str(tmp_path), device_clock="real",
+                       flush_interval=1e-3, logger_poll=1e-4)
+    be = SingleBackend.make("vectorized", n_workers=2, cfg=cfg)
+    sched = GroupCommitScheduler(
+        be, ServeConfig(latency_budget_s=5e-4, queue_capacity=10**6)
+    )
+    sched.start()
+    tickets = []
+    try:
+        # open-loop: submit at a steady offered rate, never awaiting acks,
+        # then kill mid-stream — later submissions are still in flight
+        for i in range(120):
+            tickets.append(sched.submit(
+                TxnSpec(writes=[(key_of(2000 + i), b"val-%d" % i)]),
+                client_id=i,
+            ))
+            time.sleep(2e-4)
+    finally:
+        sched.stop(quiesce=False)   # kill: no final flush, no final drain
+
+    acked = [t for t in tickets if t.status == ACKED]
+    unacked = [t for t in tickets if t.status != ACKED]
+    assert acked, "no transaction acked before the kill"
+
+    # writes buffered after the kill are never flushed (the crash tail)
+    be.occ.execute_batch(
+        [TxnSpec(writes=[(key_of(9000 + i), b"lost-%d" % i)]) for i in range(4)]
+    )
+    for d in be.engine.devices:
+        d.close()
+
+    # mid-flush kill: a partial frame lands at the end of device 0
+    with open(os.path.join(str(tmp_path), "log_0.bin"), "ab") as f:
+        f.write(_torn_record(key_of(2000)))
+        f.flush()
+        os.fsync(f.fileno())
+
+    state = recover(be.engine.devices, parallel=False)
+    for v, _ in state.data.values():
+        assert v != b"TORN-VALUE-NEVER-COMMITTED"
+        assert not v.startswith(b"lost-")
+    # acked-prefix oracle: every acked write survives, exactly (keys are
+    # written once, so value and SSN must match the ticket)
+    for t in acked:
+        k, v = t.spec.writes[0]
+        assert state.data[k.encode()] == (v, t.ssn), k
+    # recovered un-acked writes are uncorrupted (prefix property: whatever
+    # of the tail did reach the device is the real record)
+    for t in unacked:
+        k, v = t.spec.writes[0]
+        got = state.data.get(k.encode())
+        assert got is None or got[0] == v
+
+
+def test_stepped_sharded_kill_torn_tail(tmp_path):
+    be = ShardedBackend.make(n_shards=2, n_buffers=1, n_workers=2,
+                             device_kind="ssd", device_dir=str(tmp_path))
+    sched = GroupCommitScheduler(
+        be, ServeConfig(max_batch=4, latency_budget_steps=1)
+    )
+    keys = [key_of(3000 + i) for i in range(30)]
+    by_shard = [[k for k in keys if be.eng.shard_of(k) == s] for s in (0, 1)]
+    tickets = [sched.submit(TxnSpec(writes=[(k, b"s-" + k.encode())]))
+               for k in keys]
+    # cross-shard transaction on fresh keys (one per shard, written nowhere
+    # else, so the acked/un-acked oracle stays exact per key)
+    xk = [next(k for k in (key_of(4000 + i) for i in range(40))
+               if be.eng.shard_of(k) == s) for s in (0, 1)]
+    cross = sched.submit(TxnSpec(writes=[(xk[0], b"x0"), (xk[1], b"x1")]))
+    tickets.append(cross)
+    # a few full steps, then steps that flush only shard 0 — shard 1's tail
+    # stays volatile — then stop mid-drain (no quiesce: this is the crash)
+    for _ in range(4):
+        sched.step()
+    for _ in range(3):
+        sched.step(tick_parts=[0])
+    acked = [t for t in tickets if t.status == ACKED]
+    unacked = [t for t in tickets if t.status != ACKED]
+    assert acked and unacked, "want a genuine mid-drain kill"
+
+    for devs in be.eng.devices:
+        for d in devs:
+            d.close()
+    with open(os.path.join(str(tmp_path), "shard1", "log_0.bin"), "ab") as f:
+        f.write(_torn_record(by_shard[1][0]))
+        f.flush()
+        os.fsync(f.fileno())
+
+    st = recover_sharded(be.eng.devices, parallel=False)
+    for v, _ in st.data.values():
+        assert v != b"TORN-VALUE-NEVER-COMMITTED"
+    for t in acked:
+        for k, v in t.spec.writes:
+            assert st.data[k.encode()][0] == v, k
+    for t in unacked:
+        for k, v in t.spec.writes:
+            got = st.data.get(k.encode())
+            assert got is None or got[0] == v

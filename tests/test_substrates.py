@@ -120,18 +120,5 @@ def test_hlo_cost_model_counts_loops():
     assert c_scan.while_trips == [L]
 
 
-def test_serve_engine_reduced():
-    from repro.configs.base import reduced
-    from repro.configs.registry import get_config
-    from repro.models.api import build_model
-    from repro.serve.engine import ServeEngine
-
-    cfg = reduced(get_config("tinyllama-1.1b"))
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params, cache_len=48)
-    rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)}
-    res = eng.generate(batch, max_new=4)
-    assert res.tokens.shape == (2, 4)
-    assert np.all(res.tokens >= 0) and np.all(res.tokens < cfg.vocab)
+# (the LLM ServeEngine smoke test lives in test_models_smoke.py, next to
+# the model-family tests it belongs with — repro.models.serve_llm)
