@@ -7,7 +7,13 @@ The ``poplar_batch`` rows drive the same Poplar engine through the batched
 array-native forward path (`repro.db.batch.BatchOCC`: vectorized OCC +
 bulk ``reserve_batch`` SSN allocation + batch record encode) at matched
 worker counts — the acceptance target is ≥3x the scalar OCC path on YCSB
-write-only.
+write-only.  The ``fig5_batch_compiled`` row then pits the compiled fused
+validate→sequence pass (``mode="pallas"``) against the vectorized numpy
+rounds on the same batched engine.  The end-to-end gap is small by
+construction — the fused stage is ~5% of batch wall (encode/publish
+dominate; `fig_kernels.py` carries the isolated 1.4–5x stage win) — so the
+speedup is the median of *paired* back-to-back ratios, the only estimator
+that survives this container's CPU-speed episodes.
 """
 import statistics
 
@@ -60,9 +66,48 @@ def run(duration=None):
             "scalar_txn_per_s": round(s_med, 1),
             "speedup_vs_scalar_occ": round(b.txn_per_s / max(s_med, 1e-9), 2),
         })
+    # compiled fused validate→sequence (mode="pallas") vs the vectorized
+    # numpy rounds at the widest worker count — same interleaved-median
+    # protocol.  At the default batch size (2048 lanes) the fused pass is
+    # above its engagement threshold, so this measures the compiled device
+    # path, not a silent numpy fallback (benchmarks/fig_kernels.py carries
+    # the isolated kernel crossover).
+    n = THREADS[-1]
+    # the true gap here is small (the fused stage is ~5% of batch wall by
+    # Amdahl; encode/publish dominate) — 5 interleaved trials, not 3, so the
+    # medians can resolve it through the container's CPU-speed swings
+    pair_trials = 5
+    v_results, p_results = [], []
+    for _ in range(pair_trials):
+        v_results.append(run_batch_bench(n_workers=n, n_devices=2,
+                                         workload="ycsb_write",
+                                         duration=pair_duration,
+                                         mode="vectorized"))
+        p_results.append(run_batch_bench(n_workers=n, n_devices=2,
+                                         workload="ycsb_write",
+                                         duration=pair_duration,
+                                         mode="pallas"))
+    v = sorted(v_results, key=lambda r: r.txn_per_s)[pair_trials // 2]
+    p = sorted(p_results, key=lambda r: r.txn_per_s)[pair_trials // 2]
+    # speedup from the median of *paired* ratios, not the ratio of medians:
+    # each (vectorized, pallas) pair runs back-to-back, so the container's
+    # multi-second CPU-speed episodes hit both sides of a pair alike and
+    # cancel in the ratio — the only estimator fine enough for a few-percent
+    # end-to-end effect on this box
+    ratios = sorted(pi.txn_per_s / max(vi.txn_per_s, 1e-9)
+                    for vi, pi in zip(v_results, p_results))
+    rows.append({
+        "bench": "fig5_batch_compiled", "workload": "ycsb_write",
+        "engine": "poplar_batch[pallas]", "threads": n,
+        "txn_per_s": round(p.txn_per_s, 1), "committed": p.committed,
+        "aborts": p.aborts,
+        "vectorized_txn_per_s": round(v.txn_per_s, 1),
+        "speedup_vs_vectorized": round(ratios[pair_trials // 2], 3),
+    })
     emit(rows, ["bench", "workload", "engine", "threads", "txn_per_s",
                 "committed", "aborts", "scalar_txn_per_s",
-                "speedup_vs_scalar_occ"], name="fig5")
+                "speedup_vs_scalar_occ", "vectorized_txn_per_s",
+                "speedup_vs_vectorized"], name="fig5")
     return rows
 
 

@@ -1,0 +1,230 @@
+"""Kernel microbenchmarks — compiled vs interpret vs numpy, across the
+bucket ladder (BENCH_kernels.json).
+
+Two OLTP device ops, timed at each power-of-two bucket size the hot paths
+pad to:
+
+* ``replay_scan`` — hash-slot last-writer-wins scan (the device half of the
+  compiled replay path, ``kernels/ops.fused_replay_scan``).
+* ``validate_seq`` — the fused validate→sequence pass of ``BatchOCC``
+  (``kernels/ops.fused_validate_sequence``).
+
+Per (op, n) row, four engines where available:
+
+* ``numpy_sort_s`` — the *engine's prior idiom*: lexsort + first-per-group
+  segment reduction (what ``_group_winners`` / ``_first_writer`` do on the
+  vectorized path).  This is the baseline the compiled path replaced and
+  the one ``compiled_speedup`` is computed against.
+* ``numpy_scatter_s`` — best-case pure-int ``ufunc.at`` scatter on the same
+  columns.  An upper bound numpy cannot reach on the real path (keys are
+  byte strings; the hash-slot layout that makes an int scatter possible is
+  itself part of the compiled design) but reported for honesty: at small n
+  it beats everything, including the compiled op.
+* ``interpret_s`` — the Pallas kernel in interpret mode (what
+  ``mode="pallas"`` executed on CPU before the compiled XLA twins;
+  Python-evaluated, so size-capped).  Replay only — validate has no Pallas
+  twin.
+* ``compiled_s`` — the jit-compiled fused entry point.
+
+After the sweep, the jit-cache specialization counts
+(``kernels/ops.fused_cache_sizes``) are emitted — with bucket padding these
+stay at one entry per ladder rung no matter how many raw shapes stream
+through (the bound ``tests/test_bucketing.py`` asserts).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from _util import FAST, emit  # noqa: E402
+
+REPS = 3 if FAST else 5
+SIZES = (1024, 4096, 16384) if FAST else (1024, 4096, 16384, 65536)
+INTERPRET_MAX = 4096  # interpret mode is Python-evaluated; cap its sizes
+NO_POS = 2**31 - 1
+NO_WRITER = 2**31 - 1
+
+
+def _best_of(f, reps: int = REPS) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        f()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# --- numpy engines -------------------------------------------------------------
+
+def _replay_np_sort(slot, ssn, pos, n_slots):
+    """The vectorized engine's group-winner idiom on the slot columns:
+    lexsort under the (max ssn, then min pos) lattice, first row per slot
+    group wins."""
+    order = np.lexsort((pos, -ssn, slot))
+    s = slot[order]
+    first = np.ones(len(s), bool)
+    first[1:] = s[1:] != s[:-1]
+    win = order[first]
+    out_ssn = np.full(n_slots, -1, np.int64)
+    out_pos = np.full(n_slots, NO_POS, np.int64)
+    out_ssn[s[first]] = ssn[win]
+    out_pos[s[first]] = pos[win]
+    return out_ssn, out_pos
+
+
+def _replay_np_scatter(slot, ssn, pos, n_slots):
+    out_ssn = np.full(n_slots + 1, -1, np.int64)  # +1: overflow/padding slot
+    np.maximum.at(out_ssn, slot, ssn)
+    out_pos = np.full(n_slots + 1, NO_POS, np.int64)
+    cand = ssn == out_ssn[slot]
+    np.minimum.at(out_pos, slot[cand], pos[cand])
+    return out_ssn[:n_slots], out_pos[:n_slots]
+
+
+def _validate_common(acc, a_len, n_txn, k, fw_row):
+    row, pos, _, obs, ssn_now, locked = (acc[i].astype(np.int64) for i in range(6))
+    valid = (np.arange(n_txn * k) % k) < np.repeat(a_len, k)
+    ok = (fw_row >= pos) & ((obs < 0) | (ssn_now == obs)) & (locked == 0)
+    survive = (ok | ~valid).reshape(n_txn, k).all(axis=1)
+    bases = np.where(valid, ssn_now, 0).reshape(n_txn, k).max(axis=1)
+    return survive, bases
+
+
+def _validate_np_sort(acc, a_len, n_txn, k, cap):
+    """First-writer via lexsort + first-per-group (the ``_first_writer``
+    numpy idiom), then the mask/reduce validate math."""
+    row, pos, iw, _, _, _ = (acc[i].astype(np.int64) for i in range(6))
+    valid = (np.arange(n_txn * k) % k) < np.repeat(a_len, k)
+    wmask = (iw != 0) & valid
+    w_row, w_pos = row[wmask], pos[wmask]
+    fw = np.full(cap, NO_WRITER, np.int64)
+    if len(w_row):
+        order = np.lexsort((w_pos, w_row))
+        r = w_row[order]
+        first = np.ones(len(r), bool)
+        first[1:] = r[1:] != r[:-1]
+        fw[r[first]] = w_pos[order][first]
+    return _validate_common(acc, a_len, n_txn, k, fw[row])
+
+
+def _validate_np_scatter(acc, a_len, n_txn, k, cap):
+    row, pos, iw, _, _, _ = (acc[i].astype(np.int64) for i in range(6))
+    valid = (np.arange(n_txn * k) % k) < np.repeat(a_len, k)
+    w_pos = np.where((iw != 0) & valid, pos, NO_WRITER)
+    fw = np.full(cap, NO_WRITER, np.int64)
+    np.minimum.at(fw, row, w_pos)
+    return _validate_common(acc, a_len, n_txn, k, fw[row])
+
+
+# --- workload synthesis --------------------------------------------------------
+
+def _replay_inputs(n, rng):
+    n_slots = 2 * n
+    scan = np.empty((3, n), np.int32)
+    scan[0] = rng.integers(0, n_slots, n)            # slot
+    scan[1] = rng.permutation(n) + 1                 # distinct SSNs
+    scan[2] = rng.integers(0, 1 << 20, n)            # replay positions
+    return scan, n_slots
+
+
+def _validate_inputs(n_txn, k, cap, rng):
+    lanes = n_txn * k
+    acc = np.empty((6, lanes), np.int32)
+    acc[0] = rng.integers(0, cap, lanes)             # row
+    acc[1] = rng.permutation(lanes)                  # pos (txn-major order)
+    acc[2] = rng.integers(0, 2, lanes)               # is_write
+    ssn = rng.integers(1, 1 << 20, lanes).astype(np.int32)
+    acc[3] = np.where(rng.random(lanes) < 0.5, ssn, -1)  # obs (reads)
+    acc[4] = ssn                                     # ssn_now
+    acc[5] = 0                                       # locked
+    a_len = rng.integers(1, k + 1, n_txn)
+    return acc, a_len
+
+
+def run(duration=None):
+    from repro.kernels.ops import (fused_cache_sizes, fused_replay_scan,
+                                   fused_validate_sequence, ssn_scatter_max)
+
+    rng = np.random.default_rng(7)
+    rows = []
+
+    for n in SIZES:
+        scan, n_slots = _replay_inputs(n, rng)
+        slot64, ssn64, pos64 = (scan[i].astype(np.int64) for i in range(3))
+        t_sort = _best_of(lambda: _replay_np_sort(slot64, ssn64, pos64, n_slots))
+        t_scat = _best_of(lambda: _replay_np_scatter(slot64, ssn64, pos64, n_slots))
+        compiled = lambda: [a.block_until_ready() for a in  # noqa: E731
+                            fused_replay_scan(scan, n_slots=n_slots)]
+        compiled()  # compile outside the timed region
+        t_c = _best_of(compiled)
+        t_i = None
+        if n <= INTERPRET_MAX:
+            img_s = np.full(n_slots, -1, np.int32)
+            img_p = np.full(n_slots, NO_POS, np.int32)
+            interp = lambda: [a.block_until_ready() for a in  # noqa: E731
+                              ssn_scatter_max(img_s, img_p, scan[0],
+                                              scan[1], scan[2])]
+            interp()
+            t_i = _best_of(interp, reps=1 if n > 1024 else REPS)
+        # cross-check the engines agree before reporting their times
+        ref_s, ref_p = _replay_np_sort(slot64, ssn64, pos64, n_slots)
+        assert np.array_equal(*map(np.asarray,
+                                   (_replay_np_scatter(slot64, ssn64, pos64,
+                                                       n_slots)[0], ref_s)))
+        out_s, out_p = fused_replay_scan(scan, n_slots=n_slots)
+        assert np.array_equal(np.asarray(out_s, np.int64), ref_s)
+        assert np.array_equal(np.asarray(out_p, np.int64), ref_p)
+        rows.append({
+            "bench": "kernels", "op": "replay_scan", "n": n,
+            "numpy_sort_s": round(t_sort, 6),
+            "numpy_scatter_s": round(t_scat, 6),
+            "interpret_s": round(t_i, 6) if t_i else None,
+            "compiled_s": round(t_c, 6),
+            "compiled_speedup": round(t_sort / t_c, 2),
+        })
+
+    for lanes in SIZES:
+        k, cap = 4, 4096
+        n_txn = lanes // k
+        acc, a_len = _validate_inputs(n_txn, k, cap, rng)
+        t_sort = _best_of(lambda: _validate_np_sort(acc, a_len, n_txn, k, cap))
+        t_scat = _best_of(lambda: _validate_np_scatter(acc, a_len, n_txn, k, cap))
+        a_len32 = a_len.astype(np.int32)
+        compiled = lambda: [a.block_until_ready() for a in  # noqa: E731
+                            fused_validate_sequence(acc, a_len32, n_txn=n_txn,
+                                                    k=k, cap=cap)]
+        compiled()
+        t_c = _best_of(compiled)
+        ref_sv, ref_b = _validate_np_sort(acc, a_len, n_txn, k, cap)
+        out_sv, out_b = fused_validate_sequence(acc, a_len32, n_txn=n_txn,
+                                                k=k, cap=cap)
+        assert np.array_equal(np.asarray(out_sv), ref_sv)
+        assert np.array_equal(np.asarray(out_b, np.int64), ref_b)
+        rows.append({
+            "bench": "kernels", "op": "validate_seq", "n": lanes,
+            "numpy_sort_s": round(t_sort, 6),
+            "numpy_scatter_s": round(t_scat, 6),
+            "interpret_s": None,
+            "compiled_s": round(t_c, 6),
+            "compiled_speedup": round(t_sort / t_c, 2),
+        })
+
+    emit(rows, ["bench", "op", "n", "numpy_sort_s", "numpy_scatter_s",
+                "interpret_s", "compiled_s", "compiled_speedup"],
+         name="kernels")
+
+    cache = fused_cache_sizes()
+    cache_rows = [{"bench": "kernels_jit_cache", "op": op, "n": cnt}
+                  for op, cnt in sorted(cache.items())]
+    emit(cache_rows, ["bench", "op", "n"], name="kernels", append=True)
+    return rows + cache_rows
+
+
+if __name__ == "__main__":
+    run()

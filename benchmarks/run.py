@@ -35,6 +35,7 @@ BENCH_NAMES = [
     "fig_replication",
     "fig_truncation",
     "fig_serve",
+    "fig_kernels",
     "table23_recovery",
     "roofline",
 ]

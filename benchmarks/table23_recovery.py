@@ -18,8 +18,15 @@ RAW-carrying records, one device's flush frontier lagging so RSNe actually
 skips durable-but-uncommitted records) replayed through the scalar oracle
 and the batched vectorized engine across 1–8 devices, reporting the replay
 stage's wall time and records/s for each — the vectorized path must come out
->= 5x at 100k+ records.  A small ``bench=replay_kernel`` row exercises the
-Pallas SSN scatter-max apply (interpret mode on CPU, so sized down).
+>= 5x at 100k+ records.  A ``bench=replay_kernel`` row exercises the
+compiled bucket-padded scatter-max apply (``replay_columnar`` with
+``use_kernel=True``; XLA-compiled on CPU, the Pallas kernel on TPU).
+
+Part 3 (``bench=recover_fused``): end-to-end segmented recovery — the same
+synthesized logs written and sealed onto segment-chained devices, recovered
+via ``recover(mode="pallas")`` (crc-trusted fast tile decode + compiled
+hash-slot replay) vs ``recover(mode="vectorized")``, asserted state-equal.
+The compiled path must beat the vectorized one end-to-end.
 """
 
 from __future__ import annotations
@@ -204,9 +211,69 @@ def _bench_replay(n_devices: int, n_records: int):
     }
 
 
+def _seg_devices(logs, n_segments: int = 4):
+    """Write each synthesized blob onto a segment-chained in-memory device:
+    ``n_segments - 1`` sealed segments (sealed at record boundaries with the
+    correct last-SSN stamp, so seal-time crcs and RSNe floors are exactly
+    what the engine's flush path would have produced) plus a live tail."""
+    from repro.core.storage import DeviceSpec, StorageDevice
+    from repro.core.txn import _HDR, frame_scan, gather_u64
+    import numpy as np
+
+    devs = []
+    for blob in logs:
+        rec_off, _, _ = frame_scan(blob)
+        ssn = gather_u64(np.frombuffer(blob, np.uint8), rec_off + _HDR.size)
+        d = StorageDevice(DeviceSpec.null(), clock="virtual")
+        n = len(rec_off)
+        cuts = [max(1, n * i // n_segments) for i in range(1, n_segments)] + [n]
+        lo = 0
+        for ci, c in enumerate(cuts):
+            hi = int(rec_off[c]) if c < n else len(blob)
+            if hi > lo:
+                d.write(blob[lo:hi])
+                if ci < len(cuts) - 1:
+                    d.seal(int(ssn[c - 1]))
+            lo = hi
+        devs.append(d)
+    return devs
+
+
+def _bench_recover_fused(n_devices: int, n_records: int):
+    """End-to-end ``recover()`` on segmented devices: compiled fused path
+    (mode="pallas") vs the vectorized numpy engine, state-equality asserted."""
+    logs = _synth_logs(n_devices, n_records, REPLAY_KEYS)
+    devs = _seg_devices(logs)
+
+    # warm the jit cache outside the timed region (one-time process cost;
+    # bucket padding keeps it warm for every later shape)
+    recover(devs, mode="pallas")
+
+    t_vec = _best_of(lambda: recover(devs, mode="vectorized"))
+    t_fused = _best_of(lambda: recover(devs, mode="pallas"))
+    a = recover(devs, mode="vectorized")
+    b = recover(devs, mode="pallas")
+    assert a.data == b.data and a.rsne == b.rsne, "fused recovery diverged"
+    assert (a.n_replayed, a.n_skipped_uncommitted) == (
+        b.n_replayed, b.n_skipped_uncommitted)
+    return {
+        "bench": "recover_fused",
+        "devices": n_devices,
+        "n_records": n_records,
+        "segments_per_device": 4,
+        "vec_recover_s": round(t_vec, 4),
+        "fused_recover_s": round(t_fused, 4),
+        "vec_rec_per_s": int(n_records / t_vec),
+        "fused_rec_per_s": int(n_records / t_fused),
+        "speedup": round(t_vec / t_fused, 2),
+        "recovered_keys": len(b.data),
+        "agrees": True,
+    }
+
+
 def _bench_replay_kernel(n_devices: int = 2, n_records: int = 4096):
-    """Pallas scatter-max apply — interpret mode on CPU, so sized down; on
-    TPU the same kernel compiles (see kernels/scatter_max.py)."""
+    """Compiled bucket-padded scatter-max apply through ``replay_columnar``
+    (XLA on CPU, the Pallas kernel on TPU — kernels/ops.fused_replay_apply)."""
     logs = _synth_logs(n_devices, n_records, n_keys=512)
     cols = [decode_columnar(b) for b in logs]
     rsne = compute_rsne(cols)
@@ -246,7 +313,12 @@ def run(duration=None):
          name="table23", append=True)
     kernel_row = _bench_replay_kernel()
     emit([kernel_row], ["bench", "devices", "n_records", "kernel_replay_s", "agrees"], name="table23", append=True)
-    return rows + replay_rows + [kernel_row]
+    fused_rows = [_bench_recover_fused(nd, REPLAY_RECORDS) for nd in (2, 4)]
+    emit(fused_rows, ["bench", "devices", "n_records", "segments_per_device",
+                      "vec_recover_s", "fused_recover_s", "vec_rec_per_s",
+                      "fused_rec_per_s", "speedup", "recovered_keys", "agrees"],
+         name="table23", append=True)
+    return rows + replay_rows + [kernel_row] + fused_rows
 
 
 if __name__ == "__main__":

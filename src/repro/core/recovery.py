@@ -28,10 +28,12 @@ segment-sorted SSN reduction (sort by key, take the max-SSN entry per key
 segment) instead of a per-record guarded dict walk.  Three replay modes:
 
 * ``mode="vectorized"`` (default) — the batched numpy reduction;
-* ``mode="pallas"``     — same batching, but the guarded apply against the
-  recovered image runs through the Pallas SSN scatter-max kernel
-  (:func:`repro.kernels.ops.ssn_scatter_max`) — interpret mode on CPU,
-  compiled on TPU;
+* ``mode="pallas"``     — the *compiled* pipeline: vectorized tile decode
+  (`repro.core.fastdecode`, seal-crc verified) feeding the fused hash-slot
+  scatter-max scan (:func:`repro.kernels.ops.fused_replay_scan` — compiled
+  XLA on CPU/GPU, the Pallas kernel on TPU), sealed tiles prefetch-decoded
+  while the previous tile replays; anything out of profile falls back to
+  the batched path with the scatter-max kernel apply;
 * ``mode="scalar"``     — the original per-record replay, kept as the
   correctness oracle (tested equivalent on randomized logs).
 
@@ -48,6 +50,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from .checkpoint import CheckpointData, load_latest_checkpoint
+from .fastdecode import FastTile, decode_fast_tile
 from .par import parallel_for
 from .storage import StorageDevice
 from .txn import (
@@ -57,6 +60,7 @@ from .txn import (
     decode_columnar_stream,
     decode_records,
 )
+from ..kernels.bucketing import bucket, checked_i32, fits_i32, stack_i32
 
 
 @dataclass
@@ -360,11 +364,12 @@ def replay_columnar(
     # terminator) recovers the exact original key
     win_keys = key_mat[winners].tolist()
 
-    if use_kernel and n_total > n_base and (
-        int(ssn_arr.max()) >= 2**31 or n_total - n_base >= 2**31
+    if use_kernel and n_total > n_base and not (
+        fits_i32(ssn_arr) and n_total - n_base < 2**31 and n_slots < 2**31
     ):
-        # outside the kernel's int32 range (checkpoint or log SSNs, or the
-        # write count): the numpy reduction below is equivalent — fall back
+        # outside the kernel's int32 range (checkpoint or log SSNs, the
+        # write count, or the slot count): the numpy reduction below is
+        # equivalent — fall back
         use_kernel = False
 
     if not use_kernel or n_total == n_base:
@@ -375,27 +380,31 @@ def replay_columnar(
             data[k[:-1]] = (v, s)
         return data, n_replayed, n_skipped
 
-    # --- Pallas path: dense key ids + SSN-guarded scatter-max apply ----------
-    from ..kernels.ops import ssn_scatter_max
+    # --- compiled path: dense key ids + SSN-guarded scatter-max apply --------
+    # both dims bucket-padded (slots to S with empty-slot identities, lanes
+    # to N with overflow-slot lanes) so streaming callers — the replica
+    # applier polls this with a different chunk size every round — reuse a
+    # bounded set of compiled specializations
+    from ..kernels.ops import fused_replay_apply
     from ..kernels.scatter_max import NO_POS
 
-    image_ssn = np.full(n_slots, -1, np.int32)
-    image_pos = np.full(n_slots, NO_POS, np.int32)
+    s_pad = bucket(n_slots)
+    image = np.empty((2, s_pad), np.int32)
+    image[0] = -1
+    image[1] = NO_POS
     base_slots = inv[:n_base]
-    image_ssn[base_slots] = ssn_arr[:n_base]
-    image_pos[base_slots] = -1
+    image[0, base_slots] = checked_i32(ssn_arr[:n_base], "checkpoint SSNs")
+    image[1, base_slots] = -1
     base_idx_of_slot = np.full(n_slots, -1, np.int64)
     base_idx_of_slot[base_slots] = np.arange(n_base)
 
-    out_ssn, out_pos = ssn_scatter_max(
-        image_ssn,
-        image_pos,
-        inv[n_base:].astype(np.int32),
-        ssn_arr[n_base:].astype(np.int32),
-        pos_arr[n_base:].astype(np.int32),
+    scan = stack_i32(
+        [inv[n_base:], ssn_arr[n_base:], pos_arr[n_base:]],
+        bucket(n_total - n_base), fills=(s_pad, -1, int(NO_POS)),
     )
-    out_ssn = np.asarray(out_ssn)
-    out_pos = np.asarray(out_pos)
+    out_ssn, out_pos = fused_replay_apply(image, scan)
+    out_ssn = np.asarray(out_ssn)[:n_slots]
+    out_pos = np.asarray(out_pos)[:n_slots]
 
     # winners[g] is a member of group g: use it for the exact key bytes
     data = {}
@@ -405,6 +414,185 @@ def replay_columnar(
         idx = int(base_idx_of_slot[g]) if p < 0 else n_base + p
         data[win_keys[g][:-1]] = (val_arr[idx], s)
     return data, n_replayed, n_skipped
+
+
+# --- compiled fused replay (tile decode -> hash-slot scan -> merge) -----------
+
+# below this lane count the device round-trip (dispatch + transfer) costs more
+# than the numpy reduction it replaces; tiles this small reduce on the host
+_FUSED_MIN_LANES = 1024
+
+
+def _fused_tile_winners(tile: FastTile, rsne: int) -> Tuple[np.ndarray, int, int]:
+    """Per-key last-writer-wins winners among one tile's committed write
+    lanes, via the compiled hash-slot scan (:func:`repro.kernels.ops.
+    fused_replay_scan`).
+
+    Device side: every lane scatters ``(hash-slot, ssn, pos)`` into a
+    power-of-two slot table under the ``(max ssn, then min pos)`` lattice —
+    one bucket-padded int32 transfer, one compiled scatter.  Host side: the
+    winning lane of each slot is recovered by value-matching, then the two
+    ways hashing can mislead are repaired *exactly*:
+
+    * **slot spill** — distinct keys sharing a slot (expected at ~1/2 load
+      factor): every lane whose 64-bit key hash differs from its slot
+      winner's was suppressed by a different key; those lanes re-reduce
+      through the exact :func:`_group_winners` (a key's lanes are either all
+      owner-hash or all spilled, so each side sees complete key groups);
+    * **hash collision** — distinct keys with equal 64-bit hashes
+      (astronomically rare): detected by word-comparing same-hash lanes
+      against their slot winner, and the whole tile falls back to the exact
+      reduction.
+
+    Returns ``(winner lane indices, n_replayed, n_skipped)`` — lane indices
+    into the tile's write-lane arrays, records counted per the §5 guard.
+    """
+    ok = tile.committed_mask(rsne)
+    n_rep = int(np.count_nonzero(ok))
+    n_skip = tile.n_records - n_rep
+    n_lanes = len(tile.wr_rec)
+    if n_lanes == 0:
+        return np.empty(0, np.int64), n_rep, n_skip
+    if n_rep == tile.n_records:
+        lanes = np.arange(n_lanes, dtype=np.int64)
+        keys, ssn = tile.keys_fixed, tile.wr_ssn
+    else:
+        lanes = np.flatnonzero(ok[tile.wr_rec])
+        keys, ssn = tile.keys_fixed[lanes], tile.wr_ssn[lanes]
+    n = len(lanes)
+    if n == 0:
+        return lanes, n_rep, n_skip
+    pos = np.arange(n, dtype=np.int64)
+    if n < _FUSED_MIN_LANES or not fits_i32(ssn):
+        w, _, _ = _group_winners(keys, ssn, pos)
+        return lanes[w], n_rep, n_skip
+
+    from ..kernels.ops import fused_replay_scan
+    from ..kernels.scatter_max import NO_POS
+
+    words = _key_words(keys)
+    h = _hash_words(words)
+    n_slots = 2 * bucket(n)            # ~1/2 load factor keeps spills rare
+    slot = (h.view(np.uint64) & np.uint64(n_slots - 1)).view(np.int64)
+    scan = stack_i32([slot, ssn, pos], bucket(n),
+                     fills=(n_slots, -1, int(NO_POS)))
+    out_ssn, out_pos = fused_replay_scan(scan, n_slots=n_slots)
+    out_ssn = np.asarray(out_ssn).astype(np.int64)
+    out_pos = np.asarray(out_pos).astype(np.int64)
+
+    win_idx = np.flatnonzero((ssn == out_ssn[slot]) & (pos == out_pos[slot]))
+    owner_of_slot = np.empty(n_slots, np.int64)
+    owner_of_slot[slot[win_idx]] = win_idx
+    owner = owner_of_slot[slot]        # each lane's slot-winning lane
+    same_h = h == h[owner]
+    if bool((same_h & ~(words == words[owner]).all(axis=1)).any()):
+        # true 64-bit hash collision: two distinct keys merged into one
+        # hash group — resolve the whole tile exactly
+        w, _, _ = _group_winners(keys, ssn, pos)
+        return lanes[w], n_rep, n_skip
+    spill = np.flatnonzero(~same_h)
+    if len(spill):
+        w_sp, _, _ = _group_winners(keys[spill], ssn[spill], pos[spill])
+        win_idx = np.concatenate([win_idx, spill[w_sp]])
+    return lanes[win_idx], n_rep, n_skip
+
+
+def _apply_tile_winners(
+    data: Dict[bytes, Tuple[bytes, int]], tile: FastTile, lanes: np.ndarray
+) -> None:
+    """Merge one tile's per-key winners into the running image under the
+    strict-`>` SSN guard (the scalar rule: the image — which starts as the
+    checkpoint — wins ties; cross-tile same-key ties cannot happen because
+    per-key SSNs strictly increase).  Values materialize lazily here, only
+    for lanes that won their tile."""
+    if not len(lanes):
+        return
+    keys = tile.keys_fixed[lanes].tolist()
+    ssns = tile.wr_ssn[lanes].tolist()
+    for k, s, v in zip(keys, ssns, tile.values_for(lanes)):
+        key = k[:-1]                  # drop the \x01 terminator
+        cur = data.get(key)
+        if cur is None or s > cur[1]:
+            data[key] = (v, s)
+
+
+def _recover_fused(
+    state: RecoveredState,
+    devices: Sequence[StorageDevice],
+    floors: Sequence[int],
+    parallel: bool,
+) -> bool:
+    """The compiled recovery pipeline (``mode="pallas"``).
+
+    Stage order is dictated by the §5 guard: the **tails** decode first —
+    each device's durable SSN frontier pins RSNe, and an empty tail reads
+    its frontier off the newest seal stamp in the manifest — then the sealed
+    tiles stream through decode→scan→merge, prefetch-decoded on worker
+    threads (seal-crc verified, per-frame crc skipped) while the main thread
+    runs the previous tile's fused scan and merge.  Sealed segments end at
+    record boundaries, so tiles are independent and the merge is order-free.
+
+    Returns False — leaving ``state.data`` untouched — when anything is out
+    of profile (a device without a segment chain, XSHARD records, a sealed
+    blob that decodes short): the caller redoes recovery on the generic
+    columnar path, which handles all of those, with identical semantics.
+    """
+    if not all(hasattr(d, "read_segment_entries") for d in devices):
+        return False
+    per_dev = [d.read_segment_entries() for d in devices]
+
+    tail_tiles: List[FastTile] = []
+    for ents in per_dev:
+        t = decode_fast_tile(ents[-1][0])
+        if t is None:
+            return False
+        tail_tiles.append(t)
+    rsne = None
+    for ents, tt, floor in zip(per_dev, tail_tiles, floors):
+        if tt.n_records:
+            last = tt.last_ssn
+        elif len(ents) > 1:
+            last = int(ents[-2][2])   # newest sealed segment's seal stamp
+        else:
+            last = 0
+        last = max(last, floor)
+        rsne = last if rsne is None else min(rsne, last)
+    state.rsne = rsne or 0
+
+    sealed = [ents[i][:2] for ents in per_dev for i in range(len(ents) - 1)]
+    data: Dict[bytes, Tuple[bytes, int]] = dict(state.data)
+    n_rep = n_skip = 0
+
+    def _decode(ent: Tuple[bytes, Optional[int]]):
+        return decode_fast_tile(ent[0], crc=ent[1]), len(ent[0])
+
+    ex = None
+    if parallel and len(sealed) > 1:
+        from concurrent.futures import ThreadPoolExecutor
+        ex = ThreadPoolExecutor(max_workers=2)
+        tiles_iter = ex.map(_decode, sealed)
+    else:
+        tiles_iter = map(_decode, sealed)
+    try:
+        for tile, blob_len in tiles_iter:
+            if tile is None or tile.consumed < blob_len:
+                return False          # out of profile / short sealed blob
+            lanes, r, s = _fused_tile_winners(tile, state.rsne)
+            _apply_tile_winners(data, tile, lanes)
+            n_rep += r
+            n_skip += s
+    finally:
+        if ex is not None:
+            ex.shutdown(wait=False)
+    for tt in tail_tiles:
+        lanes, r, s = _fused_tile_winners(tt, state.rsne)
+        _apply_tile_winners(data, tt, lanes)
+        n_rep += r
+        n_skip += s
+    state.data = data
+    state.n_replayed = n_rep
+    state.n_skipped_uncommitted = n_skip
+    return True
 
 
 # --- top-level recovery -------------------------------------------------------
@@ -502,6 +690,9 @@ def recover(
         device_records = _load_per_device(devices, decode_records, parallel)
         state.rsne = compute_rsne(device_records, floors=floors)
         _replay_scalar(state, device_records, state.rsne, parallel)
+        return state
+
+    if mode == "pallas" and _recover_fused(state, devices, floors, parallel):
         return state
 
     logs: List[ColumnarLog] = load_columnar_segmented(devices, parallel)

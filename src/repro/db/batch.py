@@ -29,10 +29,16 @@ published with array ops instead.  This module is that pipeline:
    :meth:`~repro.core.engine.PoplarEngine.publish_batch` memcpy; tuple
    values/SSNs write back as two scatters.
 
-Both segmented reductions (step 2's first-writer min and step 3's base-SSN
-max) can run through the Pallas one-hot reduce kernel
-(``kernels/batch_occ.py``) with ``mode="pallas"`` — interpret mode on CPU,
-compiled on TPU — falling back to the numpy twin outside int32 range.
+With ``mode="pallas"`` steps 2 and 3 fuse into ONE compiled device pass
+(:func:`repro.kernels.ops.fused_validate_sequence`): the round's access
+columns leave the host as a single bucket-padded int32 transfer in a dense
+``(n_txn, k)`` layout and ``(survive, bases)`` come back together —
+first-writer min, the three validation masks, the survive reduction and the
+base-SSN max all on-device, compiled on every backend.  Batches out of
+profile (too small to beat the dispatch floor, pathological access skew,
+values beyond int32) fall back per round to the numpy reductions — or, for
+the individual segmented reduces, the Pallas one-hot kernel
+(``kernels/batch_occ.py``) — with identical results.
 
 :class:`ScalarBatchOCC` is the correctness oracle (same pattern as
 recovery's ``mode="scalar"``): identical batch semantics, executed with the
@@ -53,6 +59,7 @@ import numpy as np
 from ..core import ssn as ssn_mod
 from ..core.engine import LoggingEngine
 from ..core.txn import FLAG_HAS_READS, Txn, encode_batch, encode_batch_columns
+from ..kernels.bucketing import bucket, fits_i32, pad_i32, stack_i32
 from .array_table import ArrayTable
 from .occ import TID_STRIDE, TidStripe
 from .table import Table
@@ -269,6 +276,71 @@ class BatchOCC:
             engine.register_worker(worker_id_base + w)
         self.committed_submitted = 0
         self.aborts = 0  # per-round validation losses (retries count, like OCCWorker)
+        # below this many access lanes the fused device round costs more than
+        # the numpy reductions (dispatch + transfer floor); tests drop it to 0
+        # to force the compiled path on tiny batches
+        self.fused_min_lanes = 2048
+
+    # --- fused validate→sequence (mode="pallas", compiled) --------------------
+    def _fused_round(
+        self,
+        a_row: np.ndarray,
+        a_pos: np.ndarray,
+        iw: np.ndarray,
+        obs: np.ndarray,
+        ssn_now: np.ndarray,
+        locked: np.ndarray,
+        starts: np.ndarray,
+        a_len: np.ndarray,
+    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """One round's validate→sequence on the device, fused: the gathered
+        access columns leave the host as ONE stacked int32 transfer in a
+        dense bucket-padded ``(n_txn, k)`` layout (every transaction's
+        accesses replicated up to ``k`` lanes and masked by true length), and
+        ``(survive, bases)`` come back together — replacing the first-writer
+        scatter, three compare-masks, the survive ``reduceat`` and the
+        base-SSN segmented max (see ``kernels.batch_occ.
+        validate_sequence_xla`` for the masking rules).
+
+        Returns ``None`` — the caller runs the numpy round instead, same
+        results — when the batch is out of profile: too small to beat the
+        dispatch+transfer floor, dense padding blowup under pathological
+        access-count skew, or values outside int32 range.
+        """
+        total = len(a_row)
+        n_active = len(a_len)
+        if total < self.fused_min_lanes:
+            return None
+        k = bucket(int(a_len.max()), min_size=1)
+        n_txn = bucket(n_active)
+        if n_txn * k > max(4 * total, 4096):
+            return None                # dense layout would mostly be padding
+        if not fits_i32(ssn_now, obs, a_row):
+            return None
+        from ..kernels.ops import fused_validate_sequence
+
+        # dense gather: txn j's lane l reads access start[j] + min(l, len-1)
+        # — lanes past a txn's true count replicate its last access and are
+        # masked out by a_len on the device
+        len_p = np.ones(n_txn, np.int64)
+        len_p[:n_active] = a_len
+        st_p = np.zeros(n_txn, np.int64)
+        st_p[:n_active] = starts[:-1]
+        lane = np.arange(k, dtype=np.int64)[None, :]
+        src = (st_p[:, None] + np.minimum(lane, len_p[:, None] - 1)).ravel()
+        acc = stack_i32(
+            [a_row[src], a_pos[src], iw[src], obs[src], ssn_now[src],
+             locked[src]],
+            n_txn * k, fills=(0,) * 6,
+        )
+        survive, bases = fused_validate_sequence(
+            acc, pad_i32(a_len, n_txn, 0),
+            n_txn=n_txn, k=k, cap=bucket(len(self.table.ssn)),
+        )
+        return (
+            np.asarray(survive)[:n_active],
+            np.asarray(bases)[:n_active].astype(np.int64),
+        )
 
     # --- segmented reductions -------------------------------------------------
     def _first_writer(
@@ -404,22 +476,35 @@ class BatchOCC:
                 np.cumsum(a_len, out=starts[1:])
                 ssn_now = table.ssn[a_row]
 
-                # --- validate ----------------------------------------------
+                # --- validate + sequence -----------------------------------
                 iw = flat.acc_iswrite[a_idx]
-                fw = self._first_writer(a_row[iw], a_pos[iw], a_row)
-                ok = fw >= a_pos
                 obs = flat.acc_obs[a_idx]
-                np.logical_and(ok, (obs < 0) | (ssn_now == obs), out=ok)
-                np.logical_and(ok, ~table.locked_rows(a_row), out=ok)
-                survive = np.logical_and.reduceat(ok, starts[:-1])
+                locked = table.locked_rows(a_row)
+                fused = (
+                    self._fused_round(a_row, a_pos, iw, obs, ssn_now, locked,
+                                      starts, a_len)
+                    if self.mode == "pallas" else None
+                )
+                if fused is not None:
+                    survive, bases_all = fused
+                else:
+                    fw = self._first_writer(a_row[iw], a_pos[iw], a_row)
+                    ok = fw >= a_pos
+                    np.logical_and(ok, (obs < 0) | (ssn_now == obs), out=ok)
+                    np.logical_and(ok, ~locked, out=ok)
+                    survive = np.logical_and.reduceat(ok, starts[:-1])
+                    bases_all = None
                 win_local = np.flatnonzero(survive)
                 self.aborts += len(active) - len(win_local)
                 if not len(win_local):
                     break  # nothing can make progress without external change
                 win = active[win_local]
 
-                # --- sequence + publish the winners -------------------------
-                bases = self._base_ssns(ssn_now, starts, len(active))[win_local]
+                # --- publish the winners -----------------------------------
+                bases = (
+                    bases_all[win_local] if bases_all is not None
+                    else self._base_ssns(ssn_now, starts, len(active))[win_local]
+                )
                 txns: List[Txn] = []
                 if specs is not None:
                     for j, i in zip(win_local.tolist(), win.tolist()):

@@ -80,6 +80,41 @@ def _pad_to(a: jax.Array, n: int, fill) -> jax.Array:
     return jnp.concatenate([a, jnp.full((n - a.shape[0],), fill, a.dtype)])
 
 
+def validate_sequence_xla(
+    acc: jax.Array,     # (6, n_txn*k) int32: row, pos, iswrite, obs, ssn_now, locked
+    a_len: jax.Array,   # (n_txn,) int32 true access count per txn (0 = padding)
+    n_txn: int,         # txn bucket (rows of the dense layout)
+    k: int,             # access bucket (lanes per txn)
+    cap: int,           # row-capacity bucket (first-writer scatter width)
+):
+    """Fused validate→sequence round for the batched OCC executor
+    (`repro.db.batch.BatchOCC`, ``mode="pallas"``), compiled on any backend.
+
+    The batch arrives as ONE stacked int32 transfer in a dense bucket-padded
+    ``(n_txn, k)`` layout — every transaction's accesses padded to ``k``
+    lanes — so the two segmented reductions of the numpy path (per-txn
+    survive-AND and base-SSN max) become plain masked reshape-reduces, and
+    the only scatter left is the per-row first-writer min.  Lanes beyond a
+    transaction's true access count (``a_len``) are masked: they pass
+    validation vacuously, contribute ``0`` to the base-SSN max, and scatter
+    the min-identity ``NO_WRITER`` so they can never claim a first-writer
+    slot.  Returns ``(survive, bases)``, both ``(n_txn,)``; entries past the
+    true transaction count are vacuous (``a_len = 0``).
+    """
+    row, pos, iswrite, obs, ssn_now, locked = (acc[i] for i in range(6))
+    lane = jax.lax.broadcasted_iota(jnp.int32, (n_txn, k), 1)
+    valid = (lane < a_len.reshape(n_txn, 1)).reshape(-1)
+
+    w_pos = jnp.where((iswrite != 0) & valid, pos, NO_WRITER)
+    fw = jnp.full(cap, NO_WRITER, jnp.int32).at[row].min(
+        w_pos, mode="promise_in_bounds"
+    )[row]
+    ok = (fw >= pos) & ((obs < 0) | (ssn_now == obs)) & (locked == 0)
+    survive = (ok | ~valid).reshape(n_txn, k).all(axis=1)
+    bases = jnp.where(valid, ssn_now, 0).reshape(n_txn, k).max(axis=1)
+    return survive, bases
+
+
 def seg_reduce(
     key_id: jax.Array,   # (W,) int32 slot id per item (>= 0)
     val: jax.Array,      # (W,) int32 value per item

@@ -89,6 +89,39 @@ def _pad_to(a: jax.Array, n: int, fill) -> jax.Array:
     return jnp.concatenate([a, jnp.full((n - a.shape[0],), fill, a.dtype)])
 
 
+def ssn_scatter_max_xla(
+    image_ssn: jax.Array,   # (S,) int32, -1 = empty slot
+    image_pos: jax.Array,   # (S,) int32, -1 = checkpoint value, NO_POS = empty
+    key_id: jax.Array,      # (W,) int32 slot id per write; id == S is ignored
+    ssn: jax.Array,         # (W,) int32 SSN per write (-1 for padded lanes)
+    pos: jax.Array,         # (W,) int32 replay position (NO_POS for padding)
+    n_slots: int,
+):
+    """Compiled twin of :func:`ssn_scatter_max` for backends without a
+    Pallas lowering (CPU/GPU): the same ``(max ssn, then min pos)`` merge
+    lattice expressed as two native XLA scatters instead of the one-hot
+    grid, so ``mode="pallas"`` compiles everywhere.
+
+    Scatters accept ids in ``[0, n_slots]`` — the extra slot ``n_slots`` is
+    the overflow lane bucket padding routes to (its result is dropped), so
+    padded lanes need no branch.  Padded ``ssn = -1`` loses every max
+    against real SSNs (≥ 0) and the image init, and padded ``pos = NO_POS``
+    loses every min, so padding cannot win a slot (property-tested in
+    ``tests/test_bucketing.py``).
+    """
+    ext_ssn = jnp.concatenate([image_ssn, jnp.full((1,), -1, jnp.int32)])
+    ext_pos = jnp.concatenate([image_pos, jnp.full((1,), NO_POS, jnp.int32)])
+    out_ssn = ext_ssn.at[key_id].max(ssn, mode="promise_in_bounds")
+    cand = ssn == out_ssn[key_id]
+    cpos = jnp.where(cand, pos, NO_POS)
+    keep = image_ssn == out_ssn[:n_slots]       # image still (co-)maximal?
+    base = jnp.concatenate(
+        [jnp.where(keep, image_pos, NO_POS), jnp.full((1,), NO_POS, jnp.int32)]
+    )
+    out_pos = base.at[key_id].min(cpos, mode="promise_in_bounds")
+    return out_ssn[:n_slots], out_pos[:n_slots]
+
+
 def ssn_scatter_max(
     image_ssn: jax.Array,   # (S,) int32, -1 = empty slot
     image_pos: jax.Array,   # (S,) int32, -1 = checkpoint value, NO_POS = empty

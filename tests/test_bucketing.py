@@ -1,0 +1,260 @@
+"""Bucket padding and compiled-hot-path properties.
+
+Three contracts of the compiled (``mode="pallas"``) OLTP path:
+
+* **padding non-interference** — bucket-padded/masked lanes never influence
+  results: the fused ``BatchOCC`` pass (forced on by zeroing its engagement
+  threshold) stays byte-equivalent to the scalar oracle across the edge
+  cases where padding is most load-bearing (empty batch, single record,
+  bucket-boundary sizes, lane-blowup fallback, ragged access counts);
+* **bounded compilation** — a 100-batch stream of varied sizes compiles at
+  most one specialization per bucket-ladder rung per fused op;
+* **guarded narrowing** — values outside int32 never silently wrap: the
+  cast helpers raise, and the replay path falls back to numpy yet stays
+  equivalent at SSNs beyond 2^31 (the regression for the old blind
+  ``.astype(np.int32)``).
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, PoplarEngine, Txn, recover
+from repro.core.storage import DeviceSpec, StorageDevice
+from repro.db import ArrayTable, BatchOCC, ScalarBatchOCC, Table, TxnSpec
+from repro.db import ycsb
+from repro.kernels.bucketing import (I32_MAX, bucket, checked_i32, fits_i32,
+                                     ladder, pad_i32, stack_i32)
+
+# --- unit: the padding helpers -------------------------------------------------
+
+
+def test_bucket_ladder_shapes():
+    assert bucket(0) == 8 and bucket(8) == 8 and bucket(9) == 16
+    assert bucket(1024) == 1024 and bucket(1025) == 2048
+    assert bucket(1, min_size=1) == 1 and bucket(3, min_size=1) == 4
+    assert ladder(100) == [8, 16, 32, 64, 128]
+    assert ladder(8) == [8]
+    # the compile-count contract: sizes 1..max_n land on ladder rungs only
+    for n in range(1, 200):
+        assert bucket(n) in ladder(200)
+
+
+def test_checked_i32_guards():
+    ok = np.array([0, I32_MAX, -(2**31)], dtype=np.int64)
+    assert fits_i32(ok) and checked_i32(ok).dtype == np.int32
+    bad = np.array([1, 2**31], dtype=np.int64)
+    assert not fits_i32(bad)
+    assert not fits_i32(ok, bad)  # any offending array poisons the set
+    assert fits_i32(np.empty(0, np.int64))
+    with pytest.raises(OverflowError, match="ssn"):
+        checked_i32(bad, "ssn")
+
+
+def test_pad_and_stack_i32():
+    a = np.array([5, 6], dtype=np.int64)
+    p = pad_i32(a, 8, fill=-1)
+    assert p.tolist() == [5, 6, -1, -1, -1, -1, -1, -1]
+    s = stack_i32([a, np.array([7, 8])], 4, fills=(0, 9))
+    assert s.dtype == np.int32 and s.shape == (2, 4)
+    assert s.tolist() == [[5, 6, 0, 0], [7, 8, 9, 9]]
+    with pytest.raises(OverflowError):
+        stack_i32([np.array([2**31])], 4, fills=(0,))
+
+
+# --- fused BatchOCC edge cases vs the scalar oracle ----------------------------
+
+
+def _mk_engine(tmp_path, tag, n_buffers=2):
+    d = tmp_path / tag
+    d.mkdir()
+    return PoplarEngine(
+        EngineConfig(n_buffers=n_buffers, device_kind="null",
+                     device_dir=str(d), flush_interval=60.0)
+    )
+
+
+def _mk_pair(tmp_path, tag, mode, fused_min_lanes, n_keys=12):
+    keys = [ycsb.key_of(i) for i in range(n_keys)]
+    tab_s, tab_v = Table(), ArrayTable()
+    for k in keys[: n_keys // 2]:
+        tab_s.insert(k, b"seed")
+        tab_v.insert(k, b"seed")
+    oracle = ScalarBatchOCC(tab_s, _mk_engine(tmp_path, tag + "_s"), n_workers=4)
+    batched = BatchOCC(tab_v, _mk_engine(tmp_path, tag + "_v"), n_workers=4,
+                       mode=mode)
+    batched.fused_min_lanes = fused_min_lanes
+    return keys, tab_s, tab_v, oracle, batched
+
+
+def _check_batches(keys, tab_s, tab_v, oracle, batched, batches, max_rounds=2):
+    for specs in batches:
+        rs = oracle.execute_batch(specs, max_rounds=max_rounds)
+        rv = batched.execute_batch(specs, max_rounds=max_rounds)
+        assert rs.committed_idx == rv.committed_idx
+        assert rs.aborted == rv.aborted
+        for ts, tv in zip(rs.committed, rv.committed):
+            assert (ts.tid, ts.ssn) == (tv.tid, tv.ssn)
+        oracle.drain()
+        batched.drain()
+    state_s = {k: (tab_s.get(k).value, tab_s.get(k).ssn)
+               for k in keys if tab_s.get(k)}
+    state_v = {k: tab_v.get(k) for k in keys if tab_v.get(k) is not None}
+    assert state_s == state_v
+
+
+# fused_min_lanes=0 forces the device pass on arbitrarily small batches, so
+# these edge shapes exercise real padding lanes, not the numpy fallback
+@pytest.mark.parametrize("mode,fused_min_lanes", [
+    ("vectorized", 2048), ("pallas", 2048), ("pallas", 0),
+])
+def test_edge_batches_vs_oracle(tmp_path, mode, fused_min_lanes):
+    rng = random.Random(31)
+    keys, tab_s, tab_v, oracle, batched = _mk_pair(
+        tmp_path, f"edge_{mode}_{fused_min_lanes}", mode, fused_min_lanes)
+
+    def spec(n_writes, n_reads=0):
+        ws = [(k, rng.randbytes(rng.randrange(0, 24)))
+              for k in rng.sample(keys, n_writes)]
+        rd = rng.sample(keys, n_reads)
+        return TxnSpec(reads=rd, writes=ws or [(keys[0], b"w")])
+
+    batches = [
+        [],                                        # empty batch
+        [spec(1)],                                 # single record
+        [spec(rng.randrange(1, 3)) for _ in range(7)],   # below bucket edge
+        [spec(rng.randrange(1, 3)) for _ in range(8)],   # exactly on it
+        [spec(rng.randrange(1, 3)) for _ in range(9)],   # just past it
+        # ragged access counts: padding lanes replicate each txn's last
+        # access — masked, they must not add phantom conflicts
+        [spec(1), spec(3, 2), spec(1, 1), spec(2), spec(3)],
+    ]
+    _check_batches(keys, tab_s, tab_v, oracle, batched, batches)
+
+
+def test_lane_blowup_falls_back_correctly(tmp_path):
+    """One wide transaction among many narrow ones makes the dense (n_txn, k)
+    layout blow past its lane budget: `_fused_round` must decline (return
+    None) and the numpy fallback must keep oracle equivalence."""
+    rng = random.Random(32)
+    keys = [ycsb.key_of(i) for i in range(80)]
+    tab_s, tab_v = Table(), ArrayTable()
+    oracle = ScalarBatchOCC(tab_s, _mk_engine(tmp_path, "blow_s"), n_workers=4)
+    batched = BatchOCC(tab_v, _mk_engine(tmp_path, "blow_v"), n_workers=4,
+                       mode="pallas")
+    batched.fused_min_lanes = 0
+
+    wide = TxnSpec(reads=[], writes=[(k, b"wide") for k in keys[:64]])
+    narrow = [TxnSpec(reads=[], writes=[(rng.choice(keys), b"n%d" % i)])
+              for i in range(100)]
+    specs = [wide] + narrow
+    # k = bucket(64) = 64, n_txn = bucket(101) = 128 -> 8192 lanes, far past
+    # max(4 * total, 4096) with total = 164: the fused layout must decline
+    total = sum(len(s.writes) + len(s.reads) for s in specs)
+    assert bucket(64, min_size=1) * bucket(101) > max(4 * total, 4096)
+    rs = oracle.execute_batch(specs, max_rounds=2)
+    rv = batched.execute_batch(specs, max_rounds=2)
+    assert rs.committed_idx == rv.committed_idx
+    oracle.drain()
+    batched.drain()
+    assert {k: (tab_s.get(k).value, tab_s.get(k).ssn)
+            for k in keys if tab_s.get(k)} == \
+           {k: tab_v.get(k) for k in keys if tab_v.get(k) is not None}
+
+
+# --- bounded compilation over a varied-size stream -----------------------------
+
+
+def test_jit_cache_bounded_over_varied_stream(tmp_path):
+    """100 batches of varied sizes/access widths through the forced fused
+    path: each fused op may hold at most one specialization per bucket-ladder
+    rung actually touched — re-tracing per exact shape would fail this."""
+    from repro.kernels.ops import fused_cache_sizes
+
+    rng = random.Random(33)
+    n_keys = 64
+    keys = [ycsb.key_of(i) for i in range(n_keys)]
+    tab = ArrayTable()
+    occ = BatchOCC(tab, _mk_engine(tmp_path, "stream"), n_workers=4,
+                   mode="pallas")
+    occ.fused_min_lanes = 0
+
+    before = fused_cache_sizes()
+    max_lanes = 0
+    for i in range(100):
+        bsz = rng.randrange(1, 40)
+        specs = [
+            TxnSpec(reads=rng.sample(keys, rng.randrange(0, 2)),
+                    writes=[(k, b"v%d" % i)
+                            for k in rng.sample(keys, rng.randrange(1, 4))])
+            for _ in range(bsz)
+        ]
+        max_lanes = max(max_lanes, bucket(bsz) * bucket(3, min_size=1))
+        occ.execute_batch(specs, max_rounds=2)
+        occ.drain()
+    after = fused_cache_sizes()
+    bound = len(ladder(max_lanes))
+    for op in ("fused_validate_sequence",):
+        grown = after[op] - before[op]
+        assert 0 < grown <= bound, (op, grown, bound, after)
+    # nothing else may have specialized per-batch either
+    for op, n in after.items():
+        assert n - before.get(op, 0) <= bound, (op, n, before)
+
+
+# --- int32 narrowing regression: SSNs beyond 2^31 ------------------------------
+
+
+def _synth_devices(ssn_base: int, n_records: int = 60, n_devices: int = 2):
+    rng = random.Random(41)
+    devs = [StorageDevice(DeviceSpec.null(), clock="virtual")
+            for _ in range(n_devices)]
+    ssn = ssn_base
+    for i in range(n_records):
+        ssn += 1
+        t = Txn(tid=i, write_set=[(f"k{rng.randrange(12)}", b"v%d" % i)],
+                read_set=[("dep", 0)] if rng.random() < 0.3 else [])
+        t.ssn = ssn
+        devs[i % n_devices].write(t.encode())
+    for j, d in enumerate(devs):
+        d.seal(ssn - (n_devices - 1 - j))
+    return devs
+
+
+@pytest.mark.parametrize("ssn_base", [0, 2**31 - 30, 2**40])
+def test_replay_beyond_i32_matches_scalar(ssn_base):
+    """SSNs straddling and beyond 2^31: the kernel paths must detect the
+    overflow and fall back (never wrap) — all three modes byte-equal."""
+    devs = _synth_devices(ssn_base)
+    ref = recover(devs, mode="scalar", parallel=False)
+    for mode in ("vectorized", "pallas"):
+        st = recover(devs, mode=mode, parallel=False)
+        assert st.data == ref.data, (mode, ssn_base)
+        assert (st.rsne, st.n_replayed, st.n_skipped_uncommitted) == (
+            ref.rsne, ref.n_replayed, ref.n_skipped_uncommitted)
+
+
+# --- interpret-mode override ---------------------------------------------------
+
+
+def test_force_interpret_env(monkeypatch):
+    import jax
+
+    from repro.kernels import ops
+
+    try:
+        ops._default_interpret.cache_clear()
+        monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+        assert ops._auto_interpret(None) is True
+        # the probe is cached: flipping the env without a new process (or
+        # cache_clear) must not change the answer
+        monkeypatch.setenv("REPRO_FORCE_INTERPRET", "0")
+        assert ops._auto_interpret(None) is True
+        ops._default_interpret.cache_clear()
+        assert ops._auto_interpret(None) == (jax.default_backend() != "tpu")
+        # explicit wins over the probe either way
+        assert ops._auto_interpret(True) is True
+        assert ops._auto_interpret(False) is False
+    finally:
+        ops._default_interpret.cache_clear()

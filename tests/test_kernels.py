@@ -225,3 +225,138 @@ def test_chunked_mixer_matches_scan(arch):
     l0 = m0.train_loss(params, batch)
     l1 = m1.train_loss(params, batch)
     np.testing.assert_allclose(l0, l1, rtol=2e-3)
+
+
+# --- compiled XLA twins of the OLTP kernels ----------------------------------
+
+def _xla_twin_inputs(n_slots, n_writes, ckpt_frac, seed, pad_lanes=0):
+    rng = np.random.default_rng(seed)
+    image_ssn = np.full(n_slots, -1, np.int32)
+    image_pos = np.full(n_slots, NO_POS, np.int32)
+    ckpt = rng.random(n_slots) < ckpt_frac
+    image_ssn[ckpt] = rng.integers(0, 50, ckpt.sum())
+    image_pos[ckpt] = -1
+    key = rng.integers(0, n_slots, n_writes).astype(np.int32)
+    ssn = rng.integers(0, 60, n_writes).astype(np.int32)   # dense: many ties
+    pos = np.arange(n_writes, dtype=np.int32)
+    if pad_lanes:
+        # padding lanes target the overflow slot with reduction identities —
+        # they must not influence any real slot
+        key = np.concatenate([key, np.full(pad_lanes, n_slots, np.int32)])
+        ssn = np.concatenate([ssn, np.full(pad_lanes, -1, np.int32)])
+        pos = np.concatenate([pos, np.full(pad_lanes, NO_POS, np.int32)])
+    return image_ssn, image_pos, key, ssn, pos
+
+
+@pytest.mark.parametrize("n_slots,n_writes,ckpt_frac,pad_lanes", [
+    (64, 256, 0.0, 0),
+    (300, 1000, 0.3, 24),    # checkpoint ties + overflow padding lanes
+    (1000, 300, 0.9, 1),
+    (17, 5, 0.5, 3),
+])
+def test_scatter_max_xla_equals_pallas_and_ref(n_slots, n_writes, ckpt_frac,
+                                               pad_lanes):
+    """The compiled XLA twin == the Pallas kernel (interpret) == the
+    sequential oracle, including overflow-slot padding lanes the twin must
+    drop."""
+    from repro.kernels.scatter_max import ssn_scatter_max_xla
+
+    image_ssn, image_pos, key, ssn, pos = _xla_twin_inputs(
+        n_slots, n_writes, ckpt_frac, seed=n_slots + n_writes,
+        pad_lanes=pad_lanes)
+    out_ssn, out_pos = ssn_scatter_max_xla(image_ssn, image_pos,
+                                           key, ssn, pos, n_slots)
+    ref_ssn, ref_pos = scatter_max_ref(image_ssn, image_pos,
+                                       key[: n_writes], ssn[: n_writes],
+                                       pos[: n_writes])
+    np.testing.assert_array_equal(np.asarray(out_ssn)[:n_slots], ref_ssn)
+    np.testing.assert_array_equal(np.asarray(out_pos)[:n_slots], ref_pos)
+    k_ssn, k_pos = ssn_scatter_max(image_ssn, image_pos, key[: n_writes],
+                                   ssn[: n_writes], pos[: n_writes],
+                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_ssn)[:n_slots], np.asarray(k_ssn))
+    np.testing.assert_array_equal(np.asarray(out_pos)[:n_slots], np.asarray(k_pos))
+
+
+def test_fused_replay_entry_points_match_ref():
+    """The jitted fused entry points (stacked single-transfer layouts used by
+    the recovery/replica hot paths) == the sequential oracle."""
+    from repro.kernels.ops import fused_replay_apply, fused_replay_scan
+
+    n_slots, n_writes, pad = 256, 900, 124
+    image_ssn, image_pos, key, ssn, pos = _xla_twin_inputs(
+        n_slots, n_writes, 0.4, seed=99, pad_lanes=pad)
+    ref_ssn, ref_pos = scatter_max_ref(image_ssn, image_pos, key[:n_writes],
+                                       ssn[:n_writes], pos[:n_writes])
+    scan = np.stack([key, ssn, pos])
+    image = np.stack([image_ssn, image_pos])
+    out_ssn, out_pos = fused_replay_apply(image, scan)
+    np.testing.assert_array_equal(np.asarray(out_ssn)[:n_slots], ref_ssn)
+    np.testing.assert_array_equal(np.asarray(out_pos)[:n_slots], ref_pos)
+
+    # fused_replay_scan: same reduction against an empty image
+    empty_ssn = np.full(n_slots, -1, np.int32)
+    empty_pos = np.full(n_slots, NO_POS, np.int32)
+    ref2_ssn, ref2_pos = scatter_max_ref(empty_ssn, empty_pos, key[:n_writes],
+                                         ssn[:n_writes], pos[:n_writes])
+    s_ssn, s_pos = fused_replay_scan(scan, n_slots=n_slots)
+    np.testing.assert_array_equal(np.asarray(s_ssn)[:n_slots], ref2_ssn)
+    np.testing.assert_array_equal(np.asarray(s_pos)[:n_slots], ref2_pos)
+
+
+def _validate_brute(acc, a_len, n_txn, k):
+    """Per-transaction python walk of the §4.2/§4.4 rules."""
+    row, pos, iw, obs, ssn_now, locked = (acc[i].astype(np.int64)
+                                          for i in range(6))
+    fw = {}
+    for t in range(n_txn):
+        for j in range(int(a_len[t])):
+            lane = t * k + j
+            if iw[lane]:
+                r = int(row[lane])
+                fw[r] = min(fw.get(r, 1 << 31), int(pos[lane]))
+    survive = np.zeros(n_txn, bool)
+    bases = np.zeros(n_txn, np.int64)
+    for t in range(n_txn):
+        ok, base = True, 0
+        for j in range(int(a_len[t])):
+            lane = t * k + j
+            base = max(base, int(ssn_now[lane]))
+            if fw.get(int(row[lane]), 1 << 31) < int(pos[lane]):
+                ok = False        # someone earlier in the batch writes it
+            if obs[lane] >= 0 and ssn_now[lane] != obs[lane]:
+                ok = False        # driver-observed SSN went stale
+            if locked[lane]:
+                ok = False
+        survive[t] = ok
+        bases[t] = base
+    return survive, bases
+
+
+@pytest.mark.parametrize("n_txn,k,cap,lock_frac", [
+    (8, 1, 64, 0.0),
+    (64, 4, 128, 0.2),      # ragged a_len, locked tuples
+    (128, 2, 64, 0.0),      # conflict-heavy: cap << lanes
+])
+def test_validate_sequence_xla_vs_brute(n_txn, k, cap, lock_frac):
+    from repro.kernels.batch_occ import validate_sequence_xla
+
+    rng = np.random.default_rng(n_txn * 31 + k)
+    lanes = n_txn * k
+    acc = np.empty((6, lanes), np.int32)
+    acc[0] = rng.integers(0, cap, lanes)
+    acc[1] = rng.permutation(lanes)
+    acc[2] = rng.integers(0, 2, lanes)
+    ssn = rng.integers(1, 40, lanes).astype(np.int32)
+    acc[3] = np.where(rng.random(lanes) < 0.5, ssn, -1)
+    acc[4] = ssn
+    acc[5] = (rng.random(lanes) < lock_frac).astype(np.int32)
+    # stale observations for some read lanes
+    stale = rng.random(lanes) < 0.15
+    acc[3] = np.where(stale & (acc[3] >= 0), acc[3] + 1, acc[3])
+    a_len = rng.integers(1, k + 1, n_txn).astype(np.int32)
+
+    out_sv, out_b = validate_sequence_xla(acc, a_len, n_txn, k, cap)
+    ref_sv, ref_b = _validate_brute(acc, a_len, n_txn, k)
+    np.testing.assert_array_equal(np.asarray(out_sv), ref_sv)
+    np.testing.assert_array_equal(np.asarray(out_b, np.int64), ref_b)
