@@ -3,7 +3,7 @@
 The scan length controls the read-set size: NVM-D's GSN updates every read
 tuple (WAR tracking) so its cost grows with scan length; Poplar's SSN does
 not touch read-only tuples.  SILO pays the epoch wait in latency."""
-from _util import emit, run_bench, ycsb_hybrid_factory
+from _util import bench_runtime_setup, emit, run_bench, ycsb_hybrid_factory
 
 SCANS = (0, 10, 50, 100)
 
@@ -27,4 +27,5 @@ def run(duration=None):
 
 
 if __name__ == "__main__":
+    bench_runtime_setup()
     run()

@@ -17,7 +17,8 @@ that survives this container's CPU-speed episodes.
 """
 import statistics
 
-from _util import (DURATION, THREADS, emit, run_batch_bench, run_bench,
+from _util import (DURATION, THREADS, bench_runtime_setup, emit,
+                   run_batch_bench, run_bench,
                    tpcc_factory, ycsb_write_factory)
 
 ENGINES = ("centr", "silo", "nvmd", "poplar")
@@ -112,4 +113,5 @@ def run(duration=None):
 
 
 if __name__ == "__main__":
+    bench_runtime_setup()
     run()

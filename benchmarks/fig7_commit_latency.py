@@ -2,7 +2,8 @@
 
 Expectation (paper): SILO worst (~epoch interval, 50 ms); POPLAR/CENTR near
 the 5 ms group-commit interval at low thread counts."""
-from _util import THREADS, emit, run_bench, tpcc_factory, ycsb_write_factory
+from _util import (THREADS, bench_runtime_setup, emit, run_bench,
+                   tpcc_factory, ycsb_write_factory)
 
 ENGINES = ("centr", "silo", "nvmd", "poplar")
 
@@ -29,4 +30,5 @@ def run(duration=None):
 
 
 if __name__ == "__main__":
+    bench_runtime_setup()
     run()

@@ -1,6 +1,7 @@
 """Fig. 8 — runtime breakdown at max worker threads: Log contention
 (sequence-number allocation) / Log work (insert + buffer waits) / Other."""
-from _util import THREADS, emit, run_bench, tpcc_factory, ycsb_write_factory
+from _util import (THREADS, bench_runtime_setup, emit, run_bench,
+                   tpcc_factory, ycsb_write_factory)
 
 ENGINES = ("centr", "silo", "nvmd", "poplar")
 
@@ -30,4 +31,5 @@ def run(duration=None):
 
 
 if __name__ == "__main__":
+    bench_runtime_setup()
     run()

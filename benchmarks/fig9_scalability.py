@@ -1,5 +1,6 @@
 """Fig. 9 — peak throughput vs number of devices (CENTR pinned to 1)."""
-from _util import FAST, THREADS, emit, run_bench, tpcc_factory, ycsb_write_factory
+from _util import (FAST, THREADS, bench_runtime_setup, emit, run_bench,
+                   tpcc_factory, ycsb_write_factory)
 
 DEVICES = (1, 2, 4)
 
@@ -27,4 +28,5 @@ def run(duration=None):
 
 
 if __name__ == "__main__":
+    bench_runtime_setup()
     run()

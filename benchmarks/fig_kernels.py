@@ -42,7 +42,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from _util import FAST, emit  # noqa: E402
+from _util import FAST, bench_runtime_setup, emit  # noqa: E402
 
 REPS = 3 if FAST else 5
 SIZES = (1024, 4096, 16384) if FAST else (1024, 4096, 16384, 65536)
@@ -227,4 +227,5 @@ def run(duration=None):
 
 
 if __name__ == "__main__":
+    bench_runtime_setup()
     run()

@@ -30,7 +30,7 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from _util import FAST, emit  # noqa: E402
+from _util import FAST, bench_runtime_setup, emit  # noqa: E402
 
 from repro.core import Txn, make_devices  # noqa: E402
 from repro.replica import LogShipper, Replica  # noqa: E402
@@ -239,4 +239,5 @@ def run(duration=None):
 
 
 if __name__ == "__main__":
+    bench_runtime_setup()
     run()

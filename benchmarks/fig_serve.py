@@ -23,7 +23,7 @@ import tempfile
 import threading
 import time
 
-from _util import FAST, emit
+from _util import FAST, bench_runtime_setup, emit
 
 from repro.core import EngineConfig
 from repro.db.ycsb import YCSBWriteOnly
@@ -132,4 +132,5 @@ def run(duration=None):
 
 
 if __name__ == "__main__":
+    bench_runtime_setup()
     run()

@@ -18,11 +18,10 @@ concentrating on one.
 """
 
 import os
-import statistics
 import time
 from typing import List
 
-from _util import DURATION, FAST, emit
+from _util import DURATION, FAST, bench_runtime_setup, emit, robust_stats
 
 from repro.core.engine import EngineConfig
 from repro.db import TxnSpec
@@ -156,17 +155,22 @@ def run(duration=None):
     os.environ["REPRO_SSD_BW"] = SHARD_BW
     rows = []
     try:
+        # one discarded warm-up run per cell: first-touch numpy / thread /
+        # page-cache costs land here instead of skewing the first repeat
+        for c in cells:
+            _run_one(*c, min(duration, 0.3), seed=11)
         for rep in range(REPEATS):       # repeats interleaved over the grid
             for c in cells:
                 results[c].append(_run_one(*c, duration, seed=17 + rep))
         for n_shards, ratio in cells:
             runs = results[(n_shards, ratio)]
-            med = statistics.median(r["txn_per_s"] for r in runs)
+            stats_r = robust_stats([r["txn_per_s"] for r in runs])
             rows.append({
                 "bench": "shard", "workload": "ycsb_write",
                 "shards": n_shards, "cross_ratio": ratio,
                 "ssd_bw": SHARD_BW,
-                "txn_per_s": round(med, 1),
+                "txn_per_s": round(stats_r["median"], 1),
+                "iqr_rel": round(stats_r["iqr_rel"], 3),
                 "runs": [round(r["txn_per_s"], 1) for r in runs],
                 "quiesce_timeouts": sum(r["quiesce_timeout"] for r in runs),
                 "cross_committed": runs[-1]["cross_committed"],
@@ -175,7 +179,8 @@ def run(duration=None):
         # emit inside the pinned-env window so the JSON's meta fingerprint
         # records the bandwidth the sweep actually ran with
         emit(rows, ["bench", "workload", "shards", "cross_ratio", "ssd_bw",
-                    "txn_per_s", "cross_committed", "cross_aborts"],
+                    "txn_per_s", "iqr_rel", "cross_committed",
+                    "cross_aborts"],
              name="shard")
     finally:
         if saved is None:
@@ -189,4 +194,5 @@ def run(duration=None):
 
 
 if __name__ == "__main__":
+    bench_runtime_setup()
     run()

@@ -27,7 +27,7 @@ import time
 
 sys.path.insert(0, os.path.dirname(__file__))
 
-from _util import FAST, emit  # noqa: E402
+from _util import FAST, bench_runtime_setup, emit  # noqa: E402
 
 from repro.core import (  # noqa: E402
     CheckpointDaemon,
@@ -133,4 +133,5 @@ def run() -> None:
 
 
 if __name__ == "__main__":
+    bench_runtime_setup()
     run()

@@ -249,4 +249,7 @@ def run(duration=None):
 
 
 if __name__ == "__main__":
+    from _util import bench_runtime_setup
+
+    bench_runtime_setup()
     run()

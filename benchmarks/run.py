@@ -36,6 +36,7 @@ BENCH_NAMES = [
     "fig_truncation",
     "fig_serve",
     "fig_kernels",
+    "fig_trace",
     "table23_recovery",
     "roofline",
 ]
@@ -50,6 +51,10 @@ def main(only=None, seed=None) -> None:
         os.environ["REPRO_BENCH_SEED"] = str(seed)
         random.seed(seed)
         np.random.seed(seed)
+
+    from _util import bench_runtime_setup
+
+    bench_runtime_setup()
 
     import importlib
 

@@ -40,7 +40,8 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from _util import FAST, emit, run_bench, ycsb_write_factory  # noqa: E402
+from _util import (FAST, bench_runtime_setup, emit, run_bench,  # noqa: E402
+                   ycsb_write_factory)
 
 from repro.core import CheckpointDaemon, EngineConfig, PoplarEngine, Txn, recover  # noqa: E402
 from repro.core.recovery import (  # noqa: E402
@@ -322,4 +323,5 @@ def run(duration=None):
 
 
 if __name__ == "__main__":
+    bench_runtime_setup()
     run()

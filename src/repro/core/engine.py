@@ -27,6 +27,7 @@ from .commit import CommitProtocol, CommitQueues
 from .log_buffer import LogBuffer
 from .storage import StorageDevice, make_devices
 from .txn import Txn
+from ..trace.span import ST_FLUSH, ST_PUBLISH, TRACER
 
 
 @dataclass
@@ -114,6 +115,9 @@ class PoplarEngine(LoggingEngine):
         self.txn_logged = 0
         self.txn_committed = 0
         self._count_lock = threading.Lock()
+        # shard id stamped on this engine's trace spans (`repro.shard.engine`
+        # overwrites it on each shard's private engine)
+        self._trace_shard = 0
 
     # --- worker side --------------------------------------------------------
     def register_worker(self, worker_id: int) -> None:
@@ -176,6 +180,9 @@ class PoplarEngine(LoggingEngine):
         blob) ride along and are only enqueued.  Commit-queue pushes are
         grouped per worker (one lock acquisition each).
         """
+        _trace = TRACER.enabled
+        if _trace:
+            _t0 = time.perf_counter()
         if blob:
             self.buffers[buffer_id].fill(offset, seg_idx, blob)
         now = time.perf_counter()
@@ -192,6 +199,14 @@ class PoplarEngine(LoggingEngine):
             self.queues[w].push_batch(group)
         with self._count_lock:
             self.txn_logged += len(txns)
+        if _trace and txns:
+            ssns = [t.ssn for t in txns]
+            TRACER.record(
+                ST_PUBLISH, shard=self._trace_shard, device=buffer_id,
+                batch=TRACER.ctx.batch, txn_lo=min(ssns), txn_hi=max(ssns),
+                t0=_t0, t1=time.perf_counter(), nbytes=len(blob),
+                n_txn=len(txns),
+            )
 
     # --- external-coordinator extension points -----------------------------
     # The sharded engine (`repro.shard`) logs cross-shard records through the
@@ -278,7 +293,19 @@ class PoplarEngine(LoggingEngine):
                     self._emit_heartbeat(i, frontier)
             buf.force_establish()
             self._last_force[i] = now
+        _trace = TRACER.enabled
+        if _trace:
+            _dsn0 = buf.dsn
+            _off0 = buf.flushed_offset
+            _t0 = time.perf_counter()
         n = buf.flush_ready(self.devices[i])
+        if _trace and n:
+            TRACER.record(
+                ST_FLUSH, shard=self._trace_shard, device=i,
+                txn_lo=_dsn0, txn_hi=buf.dsn, t0=_t0,
+                t1=time.perf_counter(), nbytes=buf.flushed_offset - _off0,
+                n_txn=n, aux=n,
+            )
         if n:
             self._last_force[i] = time.perf_counter()
             if self.cfg.segment_bytes:

@@ -44,6 +44,7 @@ All modes produce identical :class:`RecoveredState` contents, including the
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -61,6 +62,7 @@ from .txn import (
     decode_records,
 )
 from ..kernels.bucketing import bucket, checked_i32, fits_i32, stack_i32
+from ..trace.span import ST_RDECODE, ST_RREPLAY, TRACER
 
 
 @dataclass
@@ -686,21 +688,60 @@ def recover(
 
     # --- stage 2: log recovery --------------------------------------------
     floors = device_ssn_floors(devices)
+    _trace = TRACER.enabled
     if mode == "scalar":
+        if _trace:
+            _t0 = time.perf_counter()
         device_records = _load_per_device(devices, decode_records, parallel)
         state.rsne = compute_rsne(device_records, floors=floors)
+        if _trace:
+            _t1 = time.perf_counter()
+            TRACER.record(
+                ST_RDECODE, device=len(devices), t0=_t0, t1=_t1,
+                n_txn=sum(len(r) for r in device_records),
+            )
         _replay_scalar(state, device_records, state.rsne, parallel)
+        if _trace:
+            TRACER.record(
+                ST_RREPLAY, txn_hi=state.rsne, t0=_t1,
+                t1=time.perf_counter(), n_txn=state.n_replayed,
+            )
         return state
 
-    if mode == "pallas" and _recover_fused(state, devices, floors, parallel):
-        return state
+    if mode == "pallas":
+        if _trace:
+            _t0 = time.perf_counter()
+        if _recover_fused(state, devices, floors, parallel):
+            if _trace:
+                # the fused pass decodes and replays in one tiled sweep;
+                # attribute it to replay (aux=1 marks the fused engine)
+                TRACER.record(
+                    ST_RREPLAY, txn_hi=state.rsne, t0=_t0,
+                    t1=time.perf_counter(), n_txn=state.n_replayed, aux=1,
+                )
+            return state
 
+    if _trace:
+        _t0 = time.perf_counter()
     logs: List[ColumnarLog] = load_columnar_segmented(devices, parallel)
     state.rsne = compute_rsne(logs, floors=floors)
+    if _trace:
+        _t1 = time.perf_counter()
+        TRACER.record(
+            ST_RDECODE, device=len(devices), t0=_t0, t1=_t1,
+            nbytes=sum(d.durable_bytes() for d in devices
+                       if hasattr(d, "durable_bytes")),
+            n_txn=sum(lg.n_records for lg in logs),
+        )
     data, n_replayed, n_skipped = replay_columnar(
         logs, state.rsne, base=state.data or None, use_kernel=(mode == "pallas")
     )
     state.data = data
     state.n_replayed = n_replayed
     state.n_skipped_uncommitted = n_skipped
+    if _trace:
+        TRACER.record(
+            ST_RREPLAY, txn_hi=state.rsne, t0=_t1, t1=time.perf_counter(),
+            n_txn=n_replayed, aux=n_skipped,
+        )
     return state

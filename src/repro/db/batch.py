@@ -59,6 +59,13 @@ import numpy as np
 from ..core import ssn as ssn_mod
 from ..core.engine import LoggingEngine
 from ..core.txn import FLAG_HAS_READS, Txn, encode_batch, encode_batch_columns
+from ..trace.span import (
+    ST_ENCODE,
+    ST_SEQUENCE,
+    ST_VALIDATE,
+    ST_WRITEBACK,
+    TRACER,
+)
 from ..kernels.bucketing import bucket, fits_i32, pad_i32, stack_i32
 from .array_table import ArrayTable
 from .occ import TID_STRIDE, TidStripe
@@ -276,6 +283,9 @@ class BatchOCC:
             engine.register_worker(worker_id_base + w)
         self.committed_submitted = 0
         self.aborts = 0  # per-round validation losses (retries count, like OCCWorker)
+        # shard id stamped on trace spans (worker_id_base = shard * n_workers
+        # by construction in repro.shard.engine; 0 for a single engine)
+        self.trace_shard = worker_id_base // max(1, n_workers)
         # below this many access lanes the fused device round costs more than
         # the numpy reductions (dispatch + transfer floor); tests drop it to 0
         # to force the compiled path on tiny batches
@@ -417,8 +427,9 @@ class BatchOCC:
         committed once the engine drains them) and the never-won indices."""
         if len(specs) == 0:
             return BatchResult()
+        t_ent = time.perf_counter() if TRACER.enabled else None
         return self._run(_Flat.from_specs(self.table, specs), worker_ids,
-                         max_rounds)
+                         max_rounds, t_enter=t_ent)
 
     def execute_indexed(
         self,
@@ -442,15 +453,17 @@ class BatchOCC:
         materialized); everything else matches :meth:`execute_batch`."""
         if len(rd_start) <= 1:
             return BatchResult()
+        t_ent = time.perf_counter() if TRACER.enabled else None
         flat = _Flat.from_indexed(self.table, rd_row, rd_start, wr_row,
                                   wr_start, wr_vals, observed, wr_vlen)
-        return self._run(flat, worker_ids, max_rounds)
+        return self._run(flat, worker_ids, max_rounds, t_enter=t_ent)
 
     def _run(
         self,
         flat: _Flat,
         worker_ids: Optional[Sequence[int]],
         max_rounds: int,
+        t_enter: Optional[float] = None,
     ) -> BatchResult:
         b = len(flat.rd_len)
         res = BatchResult()
@@ -464,8 +477,17 @@ class BatchOCC:
         t_start = time.perf_counter()
 
         active = np.arange(b, dtype=np.int64)
+        _trace = TRACER.enabled
         while len(active) and res.rounds < max_rounds:
             res.rounds += 1
+            if _trace:
+                _bid = TRACER.next_batch_id()
+                TRACER.ctx.batch = _bid
+                TRACER.ctx.shard = self.trace_shard
+                # first round: the span starts at entry so the spec
+                # flattening cost is attributed to validate, not lost
+                _tv0 = t_enter if t_enter is not None else time.perf_counter()
+                t_enter = None
             with table.mutex:
                 # --- gather the round's access view -------------------------
                 a_len = flat.acc_len[active]
@@ -496,6 +518,13 @@ class BatchOCC:
                     bases_all = None
                 win_local = np.flatnonzero(survive)
                 self.aborts += len(active) - len(win_local)
+                if _trace:
+                    _tv1 = time.perf_counter()
+                    TRACER.record(
+                        ST_VALIDATE, shard=self.trace_shard, batch=_bid,
+                        t0=_tv0, t1=_tv1, n_txn=len(active),
+                        aux=len(win_local),
+                    )
                 if not len(win_local):
                     break  # nothing can make progress without external change
                 win = active[win_local]
@@ -558,7 +587,17 @@ class BatchOCC:
                             f"batch needs {total}B on buffer {buf_id} "
                             f"(> capacity {cap}B); reduce the batch size"
                         )
+                if _trace:
+                    # sequence span: base SSNs + Txn bookkeeping + buffer
+                    # routing (everything between the masks and the first
+                    # reserve), so consecutive spans tile the round
+                    TRACER.record(
+                        ST_SEQUENCE, shard=self.trace_shard, batch=_bid,
+                        t0=_tv1, t1=time.perf_counter(), n_txn=len(win),
+                    )
                 for buf_id in write_bufs:
+                    if _trace:
+                        _te0 = time.perf_counter()
                     sel = np.flatnonzero(has_writes & (bufs == buf_id))
                     b_ssns, b_offs, seg = self.engine.buffers[buf_id].reserve_batch(
                         bases[sel], flat.rec_len[win[sel]]
@@ -595,6 +634,14 @@ class BatchOCC:
                     assert np.array_equal(lens, flat.rec_len[win[sel]]), (
                         "framed length drift between _Flat and encode"
                     )
+                    if _trace:
+                        TRACER.record(
+                            ST_ENCODE, shard=self.trace_shard,
+                            device=buf_id, batch=_bid,
+                            txn_lo=int(b_ssns[0]), txn_hi=int(b_ssns[-1]),
+                            t0=_te0, t1=time.perf_counter(),
+                            nbytes=len(blob), n_txn=len(group),
+                        )
                     self.engine.publish_batch(
                         group, blob, buffer_id=buf_id,
                         offset=int(b_offs[0]), seg_idx=seg,
@@ -604,6 +651,8 @@ class BatchOCC:
                 # SSNs as two scatters (intra-txn duplicate keys resolve
                 # last-write-wins, like the scalar apply loop); the finally
                 # guarantees the locks can't wedge the rows
+                if _trace:
+                    _tw0 = time.perf_counter()
                 tids = np.fromiter((t.tid for t in txns), np.int64, len(txns))
                 table.claim_rows(rows, np.repeat(tids, flat.wr_len[win]))
                 try:
@@ -616,12 +665,19 @@ class BatchOCC:
                     for k in ro.tolist():
                         txns[k].ssn = int(ssns[k])
                     self.engine.publish_batch([txns[k] for k in ro.tolist()])
+                if _trace:
+                    TRACER.record(
+                        ST_WRITEBACK, shard=self.trace_shard, batch=_bid,
+                        t0=_tw0, t1=time.perf_counter(), n_txn=len(txns),
+                    )
 
             res.committed.extend(txns)
             res.committed_idx.extend(win.tolist())
             self.committed_submitted += len(txns)
             active = active[~survive]
 
+        if _trace:
+            TRACER.ctx.batch = -1
         res.aborted = active.tolist()
         return res
 

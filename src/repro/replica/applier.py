@@ -41,9 +41,12 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+import time
+
 from ..core.recovery import committed_mask, replay_columnar
 from ..core.txn import ColumnarLog
 from ..db.array_table import ArrayTable
+from ..trace.span import ST_APPLY, TRACER
 
 # per-chunk gate: None = no extra gating, else a bool mask over the chunk's
 # records (the sharded cut predicate, re-evaluated as frontiers advance).
@@ -83,6 +86,8 @@ class ReplicaApplier:
         # except for gate-decided cross-shard records, whose RAW safety is
         # established per participant edge by the sharded cut instead
         self.max_qwr_applied = 0
+        # shard id stamped on trace spans (set by the sharded replica)
+        self.trace_shard = 0
 
     def held(self) -> int:
         """Shipped-but-unapplied records (beyond the watermark / gated out)."""
@@ -134,6 +139,9 @@ class ReplicaApplier:
         §5 guard (at ``watermark``) and ``gate`` admit, hold the rest.
         Returns the number of records newly applied."""
         self.n_rounds += 1
+        _trace = TRACER.enabled
+        if _trace:
+            _t0 = time.perf_counter()
         for log in new_logs:
             if log is not None and log.n_records:
                 self.pending.append(_Chunk(log))
@@ -180,6 +188,11 @@ class ReplicaApplier:
                 newly += n_ok
         self.pending = [c for c in self.pending if not c.applied.all()]
         self.n_applied += newly
+        if _trace and newly:
+            TRACER.record(
+                ST_APPLY, shard=self.trace_shard, t0=_t0,
+                t1=time.perf_counter(), n_txn=newly, aux=watermark,
+            )
         return newly
 
     # --- vectorized / pallas -------------------------------------------------

@@ -26,8 +26,11 @@ from __future__ import annotations
 import os
 from typing import List, Optional, Protocol, Sequence
 
+import time
+
 from ..core.par import parallel_for
 from ..core.txn import ColumnarLog, decode_columnar_stream
+from ..trace.span import ST_SHIP, TRACER
 
 
 class TailSource(Protocol):
@@ -73,6 +76,8 @@ class LogShipper:
         self.n_shipped = 0
         self.n_polls = 0
         self._tail = b""
+        # shard id stamped on trace spans (set by the sharded replica)
+        self.trace_shard = 0
 
     def poll(self) -> Optional[ColumnarLog]:
         """Ship the frames that became complete since the last poll.
@@ -89,6 +94,9 @@ class LogShipper:
         (`repro.replica.replica.Replica` does this transparently).
         """
         self.n_polls += 1
+        _trace = TRACER.enabled
+        if _trace:
+            _t0 = time.perf_counter()
         new = self.source.read_from(self.consumed + len(self._tail))
         buf = self._tail + new if self._tail else new
         if not buf:
@@ -100,6 +108,12 @@ class LogShipper:
             return None
         self.frontier = max(self.frontier, log.last_ssn)
         self.n_shipped += log.n_records
+        if _trace:
+            TRACER.record(
+                ST_SHIP, shard=self.trace_shard, device=self.device_id,
+                txn_hi=log.last_ssn, t0=_t0, t1=time.perf_counter(),
+                nbytes=used, n_txn=log.n_records,
+            )
         return log
 
     def rebase(self, offset: int, ssn_floor: int) -> None:

@@ -58,6 +58,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..db.batch import TxnSpec
+from ..trace.span import ST_ACK, ST_CUT, TRACER
 
 # ticket lifecycle ----------------------------------------------------------
 QUEUED = "queued"          # admitted, waiting for a batch cut
@@ -243,6 +244,9 @@ class GroupCommitScheduler:
         Stops at the first transaction sharing any key with the cut so far —
         per-key *and* global commit order equal admission order, which makes
         the log bytes independent of where cuts land."""
+        _trace = TRACER.enabled
+        if _trace:
+            _t0 = time.perf_counter()
         cut: List[Ticket] = []
         claimed: set = set()
         while self._queue and len(cut) < self.cfg.max_batch:
@@ -254,6 +258,11 @@ class GroupCommitScheduler:
             self._queue.popleft()
             self._n_admitted_queue -= 1
             cut.append(t)
+        if _trace and cut:
+            TRACER.record(
+                ST_CUT, t0=_t0, t1=time.perf_counter(),
+                n_txn=len(cut), aux=len(self._queue),
+            )
         return cut
 
     def _execute(self, cut: List[Ticket], now: float) -> None:
@@ -324,6 +333,9 @@ class GroupCommitScheduler:
         """Release every in-flight transaction whose backend drain marked it
         durably committed, in SSN order (within one release round a RAW
         dependency always acks before its dependent — SSNs order them)."""
+        _trace = TRACER.enabled
+        if _trace:
+            _t0 = time.perf_counter()
         ready = [t for t in self._inflight if t.txn.committed]
         if not ready:
             return 0
@@ -337,6 +349,11 @@ class GroupCommitScheduler:
             self.n_acked += 1
             if t._event is not None:
                 t._event.set()
+        if _trace:
+            TRACER.record(
+                ST_ACK, txn_lo=ready[0].ssn, txn_hi=ready[-1].ssn,
+                t0=_t0, t1=time.perf_counter(), n_txn=len(ready),
+            )
         return len(ready)
 
     # --- stepped mode -------------------------------------------------------

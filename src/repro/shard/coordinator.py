@@ -46,6 +46,7 @@ from ..core.ssn import base_ssn_global
 from ..core.txn import Txn
 from ..db.batch import TxnSpec
 from ..db.occ import TidStripe
+from ..trace.span import ST_XPREPARE, TRACER
 from .router import Router
 
 
@@ -193,6 +194,16 @@ class CrossShardCoordinator:
 
             xt = XTxn(gtid=gtid, has_reads=has_reads, parts=parts,
                       t_start=t_start, t_precommit=time.perf_counter())
+            if TRACER.enabled:
+                # one span per participant: the durable-on-all join in the
+                # trace DAG needs each (shard, buffer, ssn) leg separately
+                for part in parts:
+                    TRACER.record(
+                        ST_XPREPARE, shard=part.shard, device=part.buffer_id,
+                        batch=gtid, txn_lo=part.ssn, txn_hi=part.ssn,
+                        t0=t_start, t1=xt.t_precommit, n_txn=1,
+                        aux=len(parts),
+                    )
         # append outside the table mutexes: sweep() applies under self.lock
         # while taking table mutexes, so the reverse nesting would deadlock
         with self.lock:

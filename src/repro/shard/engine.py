@@ -72,6 +72,7 @@ class Shard:
                 ecfg, device_dir=os.path.join(ddir, f"shard{shard_id}")
             )
         self.engine = PoplarEngine(ecfg)
+        self.engine._trace_shard = shard_id
         self.table = ArrayTable(capacity=cfg.table_capacity, name=f"shard{shard_id}")
         self.occ = BatchOCC(
             self.table,

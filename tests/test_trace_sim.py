@@ -1,0 +1,276 @@
+"""Cost model + replay simulator fidelity.
+
+The load-bearing contracts from the ROADMAP's cost-model items:
+
+* replaying a recorded single-shard trace through the list scheduler
+  reproduces the measured wall time within 10% (the simulator's floor —
+  noise inside a span lands in both the measurement and the replay, so
+  only *untraced gaps* can diverge, and the driver hooks close those);
+* critical-path attribution accounts for >= 95% of the measured wall
+  window;
+* the fitted per-stage models and the synthetic what-if generator behave
+  monotonically (more devices never hurts an IO-bound config, cross-shard
+  ratio taxes throughput, pad calibration zeroes the calibration cell).
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig
+from repro.db.batch import TxnSpec
+from repro.db.ycsb import key_of
+from repro.serve import SingleBackend
+from repro.trace import (
+    ST_DRIVER,
+    ST_ENCODE,
+    ST_FLUSH,
+    ST_PUBLISH,
+    ST_SEQUENCE,
+    ST_VALIDATE,
+    ST_XPREPARE,
+    TRACER,
+    CostModel,
+    SimConfig,
+    TraceDump,
+    WorkloadProfile,
+    autotune,
+    build_dag,
+    critical_path,
+    disable,
+    enable,
+    simulate,
+    simulate_dag,
+)
+from repro.trace.sim import _list_schedule
+
+N_KEYS = 512
+BATCH = 256
+N_BATCH = 8
+
+
+@pytest.fixture(autouse=True)
+def _disarm():
+    yield
+    TRACER.enabled = False
+    TRACER.reset()
+
+
+def _traced_single_shard_run(tmp_path):
+    """Deterministic single-shard loop, traced end to end: driver halves
+    (workload gen, drain) wrapped in ST_DRIVER spans exactly the way
+    ``benchmarks/fig_trace.py`` wraps its measurement loop."""
+    cfg = EngineConfig(n_buffers=2, device_kind="null",
+                       device_dir=str(tmp_path))
+    backend = SingleBackend.make("vectorized", n_workers=2, cfg=cfg,
+                                 table_capacity=N_KEYS + 1)
+    for i in range(N_KEYS):
+        backend.occ.table.insert(key_of(i), b"\x00")
+    # warm-up outside the trace window
+    backend.execute([TxnSpec(writes=[(key_of(0), b"w")])])
+    backend.drain()
+
+    enable()
+    t0 = time.perf_counter()
+    for b in range(N_BATCH):
+        _td = time.perf_counter()
+        specs = [
+            TxnSpec(writes=[(key_of((b * BATCH + i) % N_KEYS),
+                             bytes([i % 251]) * 64)])
+            for i in range(BATCH)
+        ]
+        TRACER.record(ST_DRIVER, t0=_td, t1=time.perf_counter(),
+                      n_txn=BATCH)
+        backend.execute(specs)
+        _td = time.perf_counter()
+        backend.drain()
+        TRACER.record(ST_DRIVER, t0=_td, t1=time.perf_counter())
+    elapsed = time.perf_counter() - t0
+    dump = disable()
+    return dump, elapsed
+
+
+def test_replay_makespan_matches_measured(tmp_path):
+    dump, elapsed = _traced_single_shard_run(tmp_path)
+    res = simulate_dag(build_dag(dump))
+    assert res.makespan == pytest.approx(elapsed, rel=0.10)
+    assert res.txn_s > 0
+
+
+def test_critical_path_covers_wall_time(tmp_path):
+    dump, elapsed = _traced_single_shard_run(tmp_path)
+    _, attr = critical_path(build_dag(dump))
+    assert sum(attr.values()) >= 0.95 * elapsed
+    # a single-threaded run should attribute most time to stages, not waits
+    assert attr.get("wait", 0.0) <= 0.2 * elapsed
+
+
+# --- list scheduler -----------------------------------------------------------
+
+def test_list_schedule_serializes_on_one_server():
+    # three independent unit tasks on one cpu -> finish at 1, 2, 3
+    finish = _list_schedule([[], [], []], [1.0, 1.0, 1.0],
+                            ["cpu", "cpu", "cpu"], {"cpu": 1})
+    assert sorted(finish.tolist()) == [1.0, 2.0, 3.0]
+    # ... and on three cpus they all finish at 1
+    finish = _list_schedule([[], [], []], [1.0, 1.0, 1.0],
+                            ["cpu", "cpu", "cpu"], {"cpu": 3})
+    assert finish.tolist() == [1.0, 1.0, 1.0]
+
+
+def test_list_schedule_honors_dependencies_and_virtual_nodes():
+    # chain 0 -> 1 -> (virtual join 2) -> 3
+    finish = _list_schedule(
+        [[], [0], [1], [2]], [1.0, 2.0, 0.0, 1.0],
+        ["cpu", "cpu", None, "cpu"], {"cpu": 1},
+    )
+    assert finish.tolist() == [1.0, 3.0, 3.0, 4.0]
+
+
+def test_list_schedule_rejects_cycles():
+    with pytest.raises(ValueError, match="cycle"):
+        _list_schedule([[1], [0]], [1.0, 1.0], ["cpu", "cpu"], {"cpu": 1})
+
+
+# --- cost model fitting -------------------------------------------------------
+
+def _synthetic_dump(a=1e-4, b=2e-6, c=1e-9, n_rows=64, seed=3):
+    """Rows whose durations follow a known linear law t = a + b*n + c*bytes."""
+    rng = np.random.default_rng(seed)
+    n_txn = rng.integers(32, 512, n_rows)
+    nbytes = n_txn * 64
+    t0 = np.cumsum(rng.random(n_rows)) * 1e-3
+    dur = a + b * n_txn + c * nbytes
+    return TraceDump(
+        stage=np.full(n_rows, ST_VALIDATE, np.int16),
+        shard=np.zeros(n_rows, np.int32),
+        device=np.full(n_rows, -1, np.int32),
+        batch=np.arange(n_rows, dtype=np.int64),
+        txn_lo=np.zeros(n_rows, np.int64),
+        txn_hi=np.zeros(n_rows, np.int64),
+        t0=t0, t1=t0 + dur,
+        nbytes=nbytes.astype(np.int64),
+        n_txn=n_txn.astype(np.int64),
+        aux=np.zeros(n_rows, np.int64),
+    )
+
+
+def test_fit_recovers_linear_stage_cost():
+    dump = _synthetic_dump()
+    m = CostModel.fit(dump)
+    # predicted cost at a fresh operating point within 5% of ground truth
+    for n in (64, 300, 1000):
+        truth = 1e-4 + 2e-6 * n + 1e-9 * (n * 64)
+        assert m.stage_cost(ST_VALIDATE, n, n * 64) == pytest.approx(
+            truth, rel=0.05
+        )
+
+
+def test_fit_flush_recovers_device_model():
+    lat, bw = 2e-4, 50e6
+    rng = np.random.default_rng(5)
+    nbytes = rng.integers(4096, 1 << 20, 48)
+    t0 = np.cumsum(rng.random(48)) * 1e-3
+    dur = lat + nbytes / bw
+    dump = TraceDump(
+        stage=np.full(48, ST_FLUSH, np.int16),
+        shard=np.zeros(48, np.int32), device=np.zeros(48, np.int32),
+        batch=np.full(48, -1, np.int64),
+        txn_lo=np.zeros(48, np.int64), txn_hi=np.zeros(48, np.int64),
+        t0=t0, t1=t0 + dur,
+        nbytes=nbytes.astype(np.int64),
+        n_txn=np.ones(48, np.int64), aux=np.zeros(48, np.int64),
+    )
+    m = CostModel.fit(dump)
+    assert m.dev_lat == pytest.approx(lat, rel=0.05)
+    assert m.dev_bw == pytest.approx(bw, rel=0.05)
+    assert m.flush_cost(1 << 20, bw=25e6) > m.flush_cost(1 << 20, bw=50e6)
+
+
+def _toy_model():
+    m = CostModel()
+    m.coef[ST_VALIDATE] = (1e-4, 1e-6, 0.0)
+    m.coef[ST_SEQUENCE] = (5e-5, 5e-7, 0.0)
+    m.coef[ST_ENCODE] = (5e-5, 2e-7, 2e-9)
+    m.coef[ST_PUBLISH] = (5e-5, 2e-7, 1e-9)
+    m.dev_lat, m.dev_bw = 1e-4, 30e6
+    return m
+
+
+def test_simulate_monotone_in_devices_when_io_bound():
+    m = _toy_model()
+    prof = WorkloadProfile(bytes_per_txn=1000.0, txn_per_batch=512.0)
+    one = simulate(m, SimConfig(devices=1, batch_size=512, n_txn=8192), prof)
+    four = simulate(m, SimConfig(devices=4, batch_size=512, n_txn=8192), prof)
+    assert four.txn_s > one.txn_s          # striping relieves the device
+    assert one.p50_commit >= 0 and one.p99_commit >= one.p50_commit
+
+
+def test_simulate_taxes_cross_shard_ratio():
+    m = _toy_model()
+    m.coef[ST_XPREPARE] = (0.0, 2e-4, 0.0)   # expensive per-txn prepare
+    prof = WorkloadProfile(bytes_per_txn=600.0, txn_per_batch=512.0)
+    base = simulate(m, SimConfig(shards=2, batch_size=512, n_txn=8192,
+                                 cross_ratio=0.0), prof)
+    taxed = simulate(m, SimConfig(shards=2, batch_size=512, n_txn=8192,
+                                  cross_ratio=0.5), prof)
+    assert taxed.txn_s < 0.8 * base.txn_s
+
+
+def test_calibrate_pad_zeroes_calibration_cell():
+    m = _toy_model()
+    prof = WorkloadProfile(bytes_per_txn=600.0, txn_per_batch=512.0)
+    cfg = SimConfig(devices=2, batch_size=512, n_txn=8192)
+    raw = simulate(m, cfg, prof)
+    measured = raw.txn_s * 0.7             # pretend 30% untraced overhead
+    pad = m.calibrate_pad(measured, cfg, prof)
+    assert pad > 0
+    again = simulate(m, cfg, prof)
+    assert again.txn_s == pytest.approx(measured, rel=0.02)
+    # a faster-than-predicted measurement clamps to zero, never speeds up
+    assert m.calibrate_pad(raw.txn_s * 2.0, cfg, prof) == 0.0
+
+
+def test_merge_stage_grafts_coefficients():
+    m, other = _toy_model(), CostModel()
+    other.coef[ST_XPREPARE] = (1.0, 2.0, 3.0)
+    m.merge_stage(other, ST_XPREPARE)
+    assert m.coef[ST_XPREPARE] == (1.0, 2.0, 3.0)
+    m.merge_stage(CostModel(), ST_DRIVER)  # absent stage: no-op
+    assert ST_DRIVER not in m.coef
+
+
+# --- autotune -----------------------------------------------------------------
+
+def test_autotune_picks_grid_member_and_fills_table():
+    m = _toy_model()
+    prof = WorkloadProfile(bytes_per_txn=1000.0, txn_per_batch=512.0)
+    r = autotune(m, prof, n_txn=8192, batch_grid=(128, 512),
+                 device_grid=(1, 2))
+    assert (r.batch_size, r.devices) in {(128, 1), (128, 2), (512, 1),
+                                         (512, 2)}
+    assert len(r.table) == 4
+    best = max(r.table, key=lambda row: row["txn_s"])
+    assert r.predicted.txn_s == pytest.approx(best["txn_s"])
+    d = r.to_dict()
+    assert d["batch_size"] == r.batch_size and len(d["table"]) == 4
+
+
+def test_autotune_p99_budget_filters_candidates():
+    m = _toy_model()
+    prof = WorkloadProfile(bytes_per_txn=1000.0, txn_per_batch=512.0)
+    free = autotune(m, prof, n_txn=8192, batch_grid=(128, 2048),
+                    device_grid=(1,))
+    tight = autotune(m, prof, n_txn=8192, batch_grid=(128, 2048),
+                     device_grid=(1,),
+                     p99_budget=free.predicted.p99_commit * 0.5)
+    # the budget either changed the choice or the choice already fit it
+    assert tight.predicted.p99_commit <= max(
+        free.predicted.p99_commit * 0.5, tight.predicted.p99_commit
+    )
+    impossible = autotune(m, prof, n_txn=8192, batch_grid=(128, 2048),
+                          device_grid=(1,), p99_budget=1e-12)
+    assert (impossible.batch_size, impossible.devices) == (
+        free.batch_size, free.devices
+    )  # falls back to the unconstrained best
