@@ -1,0 +1,170 @@
+"""Diff fresh ``BENCH_<name>.json`` results against the committed baselines.
+
+The repo commits every benchmark's row dump (``emit(..., name=...)`` in
+``_util.py``), so after a bench run the working tree holds fresh JSON while
+``git show HEAD:BENCH_<name>.json`` still serves the committed baseline —
+this tool joins the two and prints per-row relative drift on every numeric
+column, largest movers first.
+
+Rows are matched by their *identity fields* (the non-numeric values: engine
+name, workload, config string, ...) plus a duplicate counter, falling back
+to row order when a file carries no identity at all.  Only files whose
+``fast`` flag matches are compared — a FAST=1 run against a full-duration
+baseline would be all noise.
+
+Warn-only by default (exit 0, for the CI smoke lane); ``--fail-over PCT``
+turns any drift beyond PCT percent into exit 1 for use as a local gate:
+
+    python benchmarks/run.py fig5_throughput          # refresh the JSON
+    python benchmarks/compare.py --fail-over 30 fig5  # gate at 30%
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional, Tuple
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# columns that identify a row rather than measure it, even though numeric
+_ID_HINTS = {"threads", "devices", "n_workers", "n_devices", "n_records",
+             "n_shards", "shards", "segment", "device", "warehouses", "seed"}
+
+
+def _baseline(name: str) -> Optional[Dict]:
+    """The committed ``BENCH_<name>.json`` at HEAD (None if never committed)."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:BENCH_{name}.json"],
+            cwd=_REPO_ROOT, capture_output=True, check=True,
+        ).stdout
+        return json.loads(out)
+    except (subprocess.CalledProcessError, json.JSONDecodeError, OSError):
+        return None
+
+
+def _fresh(name: str) -> Optional[Dict]:
+    path = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def _row_key(row: Dict) -> Tuple:
+    """Identity of a row: its non-measurement fields, in sorted field order."""
+    parts = []
+    for k in sorted(row):
+        v = row[k]
+        if isinstance(v, str) or isinstance(v, bool) or k in _ID_HINTS:
+            parts.append((k, v))
+    return tuple(parts)
+
+
+def _index(rows: List[Dict]) -> Dict[Tuple, Dict]:
+    """Key -> row, with a duplicate counter so repeated identities (e.g.
+    append-mode sub-tables) still pair positionally."""
+    out: Dict[Tuple, Dict] = {}
+    seen: Dict[Tuple, int] = {}
+    for i, row in enumerate(rows):
+        k = _row_key(row)
+        n = seen.get(k, 0)
+        seen[k] = n + 1
+        out[k + (("#", n),) if k else (("row", i),)] = row
+    return out
+
+
+def _drift_rows(name: str, base: Dict, new: Dict) -> List[Dict]:
+    out: List[Dict] = []
+    base_idx = _index(base.get("rows", []))
+    new_idx = _index(new.get("rows", []))
+    for key, brow in base_idx.items():
+        nrow = new_idx.get(key)
+        if nrow is None:
+            continue
+        ident = " ".join(
+            f"{k}={v}" for k, v in key if k not in ("#", "row")) or f"{key}"
+        for col in sorted(set(brow) & set(nrow)):
+            b, n = brow[col], nrow[col]
+            if (
+                isinstance(b, bool) or isinstance(n, bool)
+                or not isinstance(b, (int, float))
+                or not isinstance(n, (int, float))
+                or col in _ID_HINTS
+            ):
+                continue
+            if b == n:
+                continue
+            drift = (n - b) / abs(b) if b else float("inf")
+            out.append({
+                "bench": name, "row": ident, "col": col,
+                "base": b, "new": n, "drift_pct": 100.0 * drift,
+            })
+    return out
+
+
+def compare(names: Optional[List[str]] = None, top: int = 20) -> List[Dict]:
+    """All drift rows across the requested benches (default: every
+    ``BENCH_*.json`` in the working tree), sorted by |drift| descending."""
+    if not names:
+        names = sorted(
+            os.path.basename(p)[len("BENCH_"):-len(".json")]
+            for p in glob.glob(os.path.join(_REPO_ROOT, "BENCH_*.json"))
+        )
+    drifts: List[Dict] = []
+    for name in names:
+        base, new = _baseline(name), _fresh(name)
+        if base is None or new is None:
+            print(f"# {name}: no {'baseline' if base is None else 'fresh run'}"
+                  " — skipped")
+            continue
+        if base.get("fast") != new.get("fast"):
+            print(f"# {name}: fast flag differs (baseline={base.get('fast')} "
+                  f"fresh={new.get('fast')}) — skipped")
+            continue
+        drifts.extend(_drift_rows(name, base, new))
+    drifts.sort(key=lambda d: abs(d["drift_pct"]), reverse=True)
+
+    print("bench,row,col,base,new,drift_pct")
+    for d in drifts[:top]:
+        print(f"{d['bench']},{d['row']},{d['col']},{d['base']},{d['new']},"
+              f"{d['drift_pct']:+.1f}")
+    if len(drifts) > top:
+        print(f"# ... {len(drifts) - top} more columns moved (use --top)")
+    if not drifts:
+        print("# no drift: fresh results match the committed baselines")
+    return drifts
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("benchmarks", nargs="*",
+                    help="bench names (fig5, table23, ...); default: all "
+                         "BENCH_*.json present in the working tree")
+    ap.add_argument("--top", type=int, default=20,
+                    help="print at most N drift rows (default 20)")
+    ap.add_argument("--fail-over", type=float, default=None, metavar="PCT",
+                    help="exit 1 if any |drift| exceeds PCT percent "
+                         "(default: warn-only, always exit 0)")
+    args = ap.parse_args(argv)
+    drifts = compare(args.benchmarks, top=args.top)
+    if args.fail_over is not None:
+        over = [d for d in drifts if abs(d["drift_pct"]) > args.fail_over]
+        if over:
+            print(f"# FAIL: {len(over)} column(s) drifted beyond "
+                  f"{args.fail_over}% of baseline", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -30,7 +30,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from _util import FAST, bench_runtime_setup, emit, robust_stats
+from _util import FAST, bench_runtime_setup, emit, robust_stats, run_metadata
 
 from repro.core.engine import EngineConfig
 from repro.db import TxnSpec
@@ -287,7 +287,16 @@ def run():
         d = disable()
         if cal is None or c["txn_s"] > cal["txn_s"]:
             cal, dump = c, d
-    dump.save(os.path.join(repo_root, "BENCH_trace_dump.json"))
+    if dump.dropped:
+        raise SystemExit(
+            f"fig_trace: calibration trace dropped {dump.dropped} spans — "
+            f"a wrapped ring under-samples early stages and would skew "
+            f"every CostModel coefficient; raise enable(capacity=...)"
+        )
+    dump.save(
+        os.path.join(repo_root, "BENCH_trace_dump.json"),
+        extra={"bench": "trace_dump", "fast": FAST, "meta": run_metadata()},
+    )
     model = CostModel.fit(dump)
     profile = WorkloadProfile.from_dump(dump)
     dag = build_dag(dump)
@@ -300,6 +309,11 @@ def run():
     enable()
     _run_cell(NOISY_CELL[0], 1, CAL[0], NOISY_CELL[1])
     xdump = disable()
+    if xdump.dropped:
+        raise SystemExit(
+            f"fig_trace: cross-shard trace dropped {xdump.dropped} spans; "
+            f"refusing to graft a biased ST_XPREPARE fit"
+        )
     model.merge_stage(CostModel.fit(xdump), ST_XPREPARE)
     # fold the untraced per-txn residual (routing, GIL churn) into the
     # driver lane so predictions extrapolate from an unbiased baseline

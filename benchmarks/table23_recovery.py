@@ -115,6 +115,7 @@ def _run_one(engine_name: str, n_devices: int, tmp: str, n_txns: int = 4000):
     # emulated IO makespans (devices read in parallel)
     log_io_s = max(b / SSD_READ_BW for b in log_bytes) if log_bytes else 0.0
     ckpt_io_s = (ckpt_bytes / n_devices) / SSD_READ_BW
+    rep = state.report
     return {
         "engine": engine_name,
         "devices": n_devices,
@@ -125,6 +126,15 @@ def _run_one(engine_name: str, n_devices: int, tmp: str, n_txns: int = 4000):
         "wall_replay_s": round(wall_replay_s, 4),
         "recovered_keys": len(state.data),
         "rsne": state.rsne,
+        # structured RecoveryReport breakdown (what replayed, what each §5
+        # rule dropped, decode vs replay wall split)
+        "n_decoded": rep.n_decoded,
+        "n_replayed": rep.n_replayed,
+        "n_dropped_above_rsne": rep.n_dropped_above_rsne,
+        "ckpt_keys": rep.checkpoint_keys,
+        "decode_s": round(rep.decode_s, 4),
+        "replay_s": round(rep.replay_s, 4),
+        "n_segments": len(rep.segments),
     }
 
 
@@ -304,7 +314,9 @@ def run(duration=None):
             shutil.rmtree(tmp, ignore_errors=True)
     emit(rows, ["bench", "engine", "devices", "log_MB", "ckpt_MB",
                 "ckpt_recovery_s", "log_recovery_s", "wall_replay_s",
-                "recovered_keys", "rsne"], name="table23")
+                "recovered_keys", "rsne", "n_decoded", "n_replayed",
+                "n_dropped_above_rsne", "ckpt_keys", "decode_s", "replay_s",
+                "n_segments"], name="table23")
 
     replay_rows = [_bench_replay(nd, REPLAY_RECORDS) for nd in (1, 2, 4, 8)]
     emit(replay_rows, ["bench", "devices", "n_records", "n_skipped",

@@ -28,6 +28,7 @@ from .log_buffer import LogBuffer
 from .storage import StorageDevice, make_devices
 from .txn import Txn
 from ..trace.span import ST_FLUSH, ST_PUBLISH, TRACER
+from ..obs.metrics import REGISTRY
 
 
 @dataclass
@@ -118,6 +119,13 @@ class PoplarEngine(LoggingEngine):
         # shard id stamped on this engine's trace spans (`repro.shard.engine`
         # overwrites it on each shard's private engine)
         self._trace_shard = 0
+        # metric names are interned per device so the armed flush hook does
+        # no string formatting on the hot path
+        self._obs_names = [
+            (f"engine.flush_bytes.d{i}", f"engine.flush_txns.d{i}",
+             f"engine.buffer_occupancy.d{i}")
+            for i in range(cfg.n_buffers)
+        ]
 
     # --- worker side --------------------------------------------------------
     def register_worker(self, worker_id: int) -> None:
@@ -294,7 +302,8 @@ class PoplarEngine(LoggingEngine):
             buf.force_establish()
             self._last_force[i] = now
         _trace = TRACER.enabled
-        if _trace:
+        _obs = REGISTRY.enabled
+        if _trace or _obs:
             _dsn0 = buf.dsn
             _off0 = buf.flushed_offset
             _t0 = time.perf_counter()
@@ -306,6 +315,12 @@ class PoplarEngine(LoggingEngine):
                 t1=time.perf_counter(), nbytes=buf.flushed_offset - _off0,
                 n_txn=n, aux=n,
             )
+        if _obs:
+            names = self._obs_names[i]
+            if n:
+                REGISTRY.count(names[0], buf.flushed_offset - _off0)
+                REGISTRY.count(names[1], n)
+            REGISTRY.gauge_set(names[2], buf.pending_bytes() / buf.capacity)
         if n:
             self._last_force[i] = time.perf_counter()
             if self.cfg.segment_bytes:

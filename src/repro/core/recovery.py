@@ -66,6 +66,49 @@ from ..trace.span import ST_RDECODE, ST_RREPLAY, TRACER
 
 
 @dataclass
+class RecoveryReport:
+    """Structured account of one recovery pass — what was decoded, what
+    replayed, and what each §5 rule dropped — consumed by
+    ``repro.obs.forensics`` and logged by ``benchmarks/table23_recovery.py``.
+
+    ``segments`` holds one row per decoded (device, segment) blob:
+    ``{"device", "segment", "bytes", "records", "seconds"}`` (empty for the
+    scalar and fused modes, which do not decode per-segment).
+    """
+
+    mode: str = "vectorized"
+    fused: bool = False               # the pallas tiled pipeline engaged
+    n_devices: int = 0
+    rsns: int = 0
+    rsne: int = 0
+    n_decoded: int = 0                # records decoded from retained logs
+    n_replayed: int = 0
+    n_dropped_above_rsne: int = 0     # HAS_READS records with ssn > RSNe
+    n_dropped_not_durable_all: int = 0  # cross-shard cut drops (sharded only)
+    checkpoint_keys: int = 0
+    decode_s: float = 0.0
+    replay_s: float = 0.0
+    segments: List[Dict] = field(default_factory=list)
+
+    def to_dict(self) -> Dict:
+        return {
+            "mode": self.mode,
+            "fused": self.fused,
+            "n_devices": self.n_devices,
+            "rsns": self.rsns,
+            "rsne": self.rsne,
+            "n_decoded": self.n_decoded,
+            "n_replayed": self.n_replayed,
+            "n_dropped_above_rsne": self.n_dropped_above_rsne,
+            "n_dropped_not_durable_all": self.n_dropped_not_durable_all,
+            "checkpoint_keys": self.checkpoint_keys,
+            "decode_s": self.decode_s,
+            "replay_s": self.replay_s,
+            "segments": list(self.segments),
+        }
+
+
+@dataclass
 class RecoveredState:
     """Recovered database image: key -> (value, ssn)."""
 
@@ -74,6 +117,7 @@ class RecoveredState:
     rsne: int = 0
     n_replayed: int = 0
     n_skipped_uncommitted: int = 0
+    report: Optional[RecoveryReport] = None
 
     def get(self, key: bytes) -> Optional[bytes]:
         v = self.data.get(key)
@@ -610,7 +654,8 @@ def _load_per_device(devices: Sequence[StorageDevice], decode, parallel: bool) -
 
 
 def load_columnar_segmented(
-    devices: Sequence[StorageDevice], parallel: bool
+    devices: Sequence[StorageDevice], parallel: bool,
+    segments: Optional[List[Dict]] = None,
 ) -> List[ColumnarLog]:
     """Segment-parallel columnar decode: every (device, segment) pair decodes
     on its own thread and the chunks splice back per device in chain order.
@@ -620,6 +665,9 @@ def load_columnar_segmented(
     last chunk, so per-segment truncation semantics equal whole-log decode.
     Devices without a segment chain (journal lanes, test doubles) fall back
     to one blob via ``read_all``.
+
+    ``segments``, when given, is extended with one per-(device, segment)
+    timing row (the :class:`RecoveryReport` decode breakdown).
     """
     blobs: List[List[bytes]] = [
         d.read_segment_blobs() if hasattr(d, "read_segment_blobs")
@@ -628,12 +676,24 @@ def load_columnar_segmented(
     ]
     flat = [(di, si) for di, bs in enumerate(blobs) for si in range(len(bs))]
     decoded: List[Optional[Tuple[ColumnarLog, int]]] = [None] * len(flat)
+    seg_s = [0.0] * len(flat)
 
     def _decode(j: int) -> None:
         di, si = flat[j]
+        t0 = time.perf_counter()
         decoded[j] = decode_columnar_stream(blobs[di][si])
+        seg_s[j] = time.perf_counter() - t0
 
     parallel_for(len(flat), _decode, parallel)
+
+    if segments is not None:
+        for j, (di, si) in enumerate(flat):
+            segments.append({
+                "device": di, "segment": si,
+                "bytes": len(blobs[di][si]),
+                "records": decoded[j][0].n_records,
+                "seconds": seg_s[j],
+            })
 
     out: List[ColumnarLog] = []
     j = 0
@@ -677,6 +737,7 @@ def recover(
     if mode not in ("vectorized", "pallas", "scalar"):
         raise ValueError(f"unknown recovery mode {mode!r}")
     state = RecoveredState()
+    report = state.report = RecoveryReport(mode=mode, n_devices=len(devices))
 
     # --- stage 1: checkpoint recovery -------------------------------------
     ckpt: Optional[CheckpointData] = None
@@ -685,53 +746,69 @@ def recover(
     if ckpt is not None:
         state.rsns = ckpt.rsn
         state.data.update(ckpt.data)
+        report.rsns = ckpt.rsn
+        report.checkpoint_keys = len(ckpt.data)
+
+    def _finalize() -> RecoveredState:
+        report.rsne = state.rsne
+        report.n_replayed = state.n_replayed
+        report.n_dropped_above_rsne = state.n_skipped_uncommitted
+        return state
 
     # --- stage 2: log recovery --------------------------------------------
     floors = device_ssn_floors(devices)
     _trace = TRACER.enabled
     if mode == "scalar":
-        if _trace:
-            _t0 = time.perf_counter()
+        _t0 = time.perf_counter()
         device_records = _load_per_device(devices, decode_records, parallel)
         state.rsne = compute_rsne(device_records, floors=floors)
+        _t1 = time.perf_counter()
+        report.decode_s = _t1 - _t0
+        report.n_decoded = sum(len(r) for r in device_records)
         if _trace:
-            _t1 = time.perf_counter()
             TRACER.record(
                 ST_RDECODE, device=len(devices), t0=_t0, t1=_t1,
-                n_txn=sum(len(r) for r in device_records),
+                n_txn=report.n_decoded,
             )
         _replay_scalar(state, device_records, state.rsne, parallel)
+        report.replay_s = time.perf_counter() - _t1
         if _trace:
             TRACER.record(
                 ST_RREPLAY, txn_hi=state.rsne, t0=_t1,
-                t1=time.perf_counter(), n_txn=state.n_replayed,
+                t1=_t1 + report.replay_s, n_txn=state.n_replayed,
             )
-        return state
+        return _finalize()
 
     if mode == "pallas":
-        if _trace:
-            _t0 = time.perf_counter()
+        _t0 = time.perf_counter()
         if _recover_fused(state, devices, floors, parallel):
+            report.fused = True
+            # one tiled decode→scan→merge sweep: decode and replay are
+            # pipelined, so the wall time is attributed to replay
+            report.replay_s = time.perf_counter() - _t0
+            report.n_decoded = state.n_replayed + state.n_skipped_uncommitted
             if _trace:
-                # the fused pass decodes and replays in one tiled sweep;
-                # attribute it to replay (aux=1 marks the fused engine)
+                # (aux=1 marks the fused engine)
                 TRACER.record(
                     ST_RREPLAY, txn_hi=state.rsne, t0=_t0,
-                    t1=time.perf_counter(), n_txn=state.n_replayed, aux=1,
+                    t1=_t0 + report.replay_s, n_txn=state.n_replayed, aux=1,
                 )
-            return state
+            return _finalize()
 
-    if _trace:
-        _t0 = time.perf_counter()
-    logs: List[ColumnarLog] = load_columnar_segmented(devices, parallel)
+    _t0 = time.perf_counter()
+    logs: List[ColumnarLog] = load_columnar_segmented(
+        devices, parallel, segments=report.segments
+    )
     state.rsne = compute_rsne(logs, floors=floors)
+    _t1 = time.perf_counter()
+    report.decode_s = _t1 - _t0
+    report.n_decoded = sum(lg.n_records for lg in logs)
     if _trace:
-        _t1 = time.perf_counter()
         TRACER.record(
             ST_RDECODE, device=len(devices), t0=_t0, t1=_t1,
             nbytes=sum(d.durable_bytes() for d in devices
                        if hasattr(d, "durable_bytes")),
-            n_txn=sum(lg.n_records for lg in logs),
+            n_txn=report.n_decoded,
         )
     data, n_replayed, n_skipped = replay_columnar(
         logs, state.rsne, base=state.data or None, use_kernel=(mode == "pallas")
@@ -739,9 +816,10 @@ def recover(
     state.data = data
     state.n_replayed = n_replayed
     state.n_skipped_uncommitted = n_skipped
+    report.replay_s = time.perf_counter() - _t1
     if _trace:
         TRACER.record(
-            ST_RREPLAY, txn_hi=state.rsne, t0=_t1, t1=time.perf_counter(),
-            n_txn=n_replayed, aux=n_skipped,
+            ST_RREPLAY, txn_hi=state.rsne, t0=_t1,
+            t1=_t1 + report.replay_s, n_txn=n_replayed, aux=n_skipped,
         )
-    return state
+    return _finalize()

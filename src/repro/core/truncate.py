@@ -52,6 +52,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .checkpoint import load_latest_checkpoint_meta
 from .txn import decode_columnar
+from ..obs.metrics import REGISTRY
 
 
 class FrontierRegistry:
@@ -134,27 +135,38 @@ class LogTruncator:
         self.last_epoch: Optional[int] = None
         self.total_bytes_dropped = 0
         self._last_safe = -1       # safe point of the last pass (threaded mode)
+        self._safe_advance_t = time.monotonic()  # last time the safe point rose
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
     # --- safe point --------------------------------------------------------
-    def _anchor(self) -> Optional[Tuple[int, int]]:
-        """``(checkpoint epoch, safe SSN)`` — the one place the safe-point
-        rule lives: the newest checkpoint's RSN, capped by the registered
-        consumers' min frontier.  None without a checkpoint."""
+    def _anchor(self) -> Optional[Tuple[int, int, int]]:
+        """``(checkpoint epoch, safe SSN, checkpoint RSN)`` — the one place
+        the safe-point rule lives: the newest checkpoint's RSN, capped by
+        the registered consumers' min frontier.  None without a checkpoint.
+        ``safe < RSN`` means a consumer frontier is pinning the safe point
+        below what the checkpoint alone would allow (a truncation stall)."""
         meta = load_latest_checkpoint_meta(self.checkpoint_dir)
         if meta is None:
             return None
-        safe = int(meta["rsn"])
+        rsn = int(meta["rsn"])
+        safe = rsn
         cap = self.registry.min_frontier()
         if cap is not None:
             safe = min(safe, cap)
-        return int(meta["epoch"]), safe
+        return int(meta["epoch"]), safe, rsn
 
     def safe_ssn(self) -> Optional[int]:
         """The current safe truncation SSN, or None without a checkpoint."""
         a = self._anchor()
         return None if a is None else a[1]
+
+    def stall_ssn(self) -> int:
+        """How far a consumer frontier pins the safe point below the
+        checkpoint RSN (0 = no stall / no checkpoint).  The health monitor's
+        truncation-stall signal."""
+        a = self._anchor()
+        return 0 if a is None else a[2] - a[1]
 
     # --- one pass ----------------------------------------------------------
     def _seal_all(self, stats: TruncationStats) -> None:
@@ -173,7 +185,7 @@ class LogTruncator:
         anchor = self._anchor()
         if anchor is None:
             return stats
-        stats.epoch, stats.safe_ssn = anchor
+        stats.epoch, stats.safe_ssn, ckpt_rsn = anchor
         safe = stats.safe_ssn
         self._seal_all(stats)
         for dev in self.engine.devices:
@@ -182,8 +194,19 @@ class LogTruncator:
             stats.bytes_dropped += b
             stats.per_device.append({"segments": n, "bytes": b})
         self.last_epoch = stats.epoch
+        if stats.safe_ssn > self._last_safe:
+            self._safe_advance_t = time.monotonic()
         self._last_safe = stats.safe_ssn
         self.total_bytes_dropped += stats.bytes_dropped
+        if REGISTRY.enabled:
+            REGISTRY.count("truncate.bytes_reclaimed", stats.bytes_dropped)
+            REGISTRY.count("truncate.segments_dropped", stats.segments_dropped)
+            REGISTRY.gauge_set("truncate.safe_ssn", float(safe))
+            REGISTRY.gauge_set("truncate.pin_ssn", float(ckpt_rsn - safe))
+            REGISTRY.gauge_set("truncate.safe_point_age_s",
+                               time.monotonic() - self._safe_advance_t)
+            if ckpt_rsn > safe:
+                REGISTRY.count("truncate.stalled_passes")
         return stats
 
     # --- continuous operation ----------------------------------------------

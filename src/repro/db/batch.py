@@ -67,6 +67,7 @@ from ..trace.span import (
     TRACER,
 )
 from ..kernels.bucketing import bucket, fits_i32, pad_i32, stack_i32
+from ..obs.metrics import REGISTRY
 from .array_table import ArrayTable
 from .occ import TID_STRIDE, TidStripe
 from .table import Table
@@ -320,12 +321,18 @@ class BatchOCC:
         total = len(a_row)
         n_active = len(a_len)
         if total < self.fused_min_lanes:
+            if REGISTRY.enabled:
+                REGISTRY.count("occ.fused.decline.small_batch")
             return None
         k = bucket(int(a_len.max()), min_size=1)
         n_txn = bucket(n_active)
         if n_txn * k > max(4 * total, 4096):
+            if REGISTRY.enabled:
+                REGISTRY.count("occ.fused.decline.dense_padding")
             return None                # dense layout would mostly be padding
         if not fits_i32(ssn_now, obs, a_row):
+            if REGISTRY.enabled:
+                REGISTRY.count("occ.fused.decline.i32_range")
             return None
         from ..kernels.ops import fused_validate_sequence
 
@@ -347,6 +354,10 @@ class BatchOCC:
             acc, pad_i32(a_len, n_txn, 0),
             n_txn=n_txn, k=k, cap=bucket(len(self.table.ssn)),
         )
+        if REGISTRY.enabled:
+            from ..kernels.bucketing import gauge_jit_cache
+
+            gauge_jit_cache([fused_validate_sequence])
         return (
             np.asarray(survive)[:n_active],
             np.asarray(bases)[:n_active].astype(np.int64),
@@ -509,6 +520,8 @@ class BatchOCC:
                 )
                 if fused is not None:
                     survive, bases_all = fused
+                    if REGISTRY.enabled:
+                        REGISTRY.count("occ.fused.rounds")
                 else:
                     fw = self._first_writer(a_row[iw], a_pos[iw], a_row)
                     ok = fw >= a_pos
@@ -518,6 +531,10 @@ class BatchOCC:
                     bases_all = None
                 win_local = np.flatnonzero(survive)
                 self.aborts += len(active) - len(win_local)
+                if REGISTRY.enabled:
+                    REGISTRY.count("occ.validate.wins", len(win_local))
+                    REGISTRY.count("occ.validate.losses",
+                                   len(active) - len(win_local))
                 if _trace:
                     _tv1 = time.perf_counter()
                     TRACER.record(

@@ -99,3 +99,20 @@ def jit_cache_size(fn) -> int:
 
 def total_jit_cache_size(fns: Iterable) -> int:
     return sum(jit_cache_size(f) for f in fns)
+
+
+def gauge_jit_cache(fns: Iterable, name: str = "kernels.jit_cache_size") -> int:
+    """Publish the total compiled-specialization count as a registry gauge
+    (and return it).  Sampled, not hooked: compile-cache growth is driven by
+    shape churn, so callers gauge it at batch boundaries or register it as a
+    snapshot callback:
+
+        REGISTRY.register_callback("kernels.jit_cache_size",
+                                   lambda: total_jit_cache_size(fns))
+    """
+    from ..obs.metrics import REGISTRY
+
+    n = total_jit_cache_size(fns)
+    if REGISTRY.enabled:
+        REGISTRY.gauge_set(name, float(n))
+    return n

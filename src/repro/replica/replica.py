@@ -43,6 +43,7 @@ from ..core.par import parallel_for
 from ..core.recovery import RecoveredState
 from ..core.storage import StorageDevice, TruncatedLogError
 from ..db.array_table import ArrayTable
+from ..obs.metrics import REGISTRY
 from .applier import GateFn, ReplicaApplier
 from .shipper import LogShipper
 
@@ -69,6 +70,13 @@ class Replica:
         self._watermark = 0
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        # monotonic stamp of the last watermark advance — "lag in seconds"
+        self._w_advance_t = time.monotonic()
+        self._obs_names = tuple(
+            f"replica.{name}.{suffix}"
+            for suffix in ("visible_ssn", "lag_ssn", "lag_s",
+                           "ship_backlog_bytes", "apply_backlog")
+        )
         if checkpoint_dir is not None:
             ckpt = load_latest_checkpoint(checkpoint_dir, parallel=parallel)
             if ckpt is not None:
@@ -181,7 +189,20 @@ class Replica:
             w = min(w, watermark)
         if w > self._watermark:
             self._watermark = w
-        return self.applier.apply(new, self._watermark, gate=gate)
+            self._w_advance_t = time.monotonic()
+        n = self.applier.apply(new, self._watermark, gate=gate)
+        if REGISTRY.enabled:
+            names = self._obs_names
+            REGISTRY.gauge_set(names[0], float(self._watermark))
+            # SSN lag: spread between the fastest shipped frontier and the
+            # RAW-safe watermark — what the min() rule is holding back
+            REGISTRY.gauge_set(
+                names[1], float((max(fr) if fr else 0) - self._watermark))
+            REGISTRY.gauge_set(
+                names[2], time.monotonic() - self._w_advance_t)
+            REGISTRY.gauge_set(names[3], float(self.lag_bytes()))
+            REGISTRY.gauge_set(names[4], float(self.applier.held()))
+        return n
 
     def poll(self, gate: Optional[GateFn] = None,
              watermark: Optional[int] = None,

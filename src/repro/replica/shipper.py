@@ -31,6 +31,7 @@ import time
 from ..core.par import parallel_for
 from ..core.txn import ColumnarLog, decode_columnar_stream
 from ..trace.span import ST_SHIP, TRACER
+from ..obs.metrics import REGISTRY
 
 
 class TailSource(Protocol):
@@ -114,6 +115,9 @@ class LogShipper:
                 txn_hi=log.last_ssn, t0=_t0, t1=time.perf_counter(),
                 nbytes=used, n_txn=log.n_records,
             )
+        if REGISTRY.enabled:
+            REGISTRY.count("replica.ship_bytes", used)
+            REGISTRY.count("replica.ship_records", log.n_records)
         return log
 
     def rebase(self, offset: int, ssn_floor: int) -> None:

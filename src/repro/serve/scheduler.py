@@ -58,6 +58,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..db.batch import TxnSpec
+from ..obs.metrics import REGISTRY
 from ..trace.span import ST_ACK, ST_CUT, TRACER
 
 # ticket lifecycle ----------------------------------------------------------
@@ -193,6 +194,8 @@ class GroupCommitScheduler:
             if self._n_admitted_queue >= self.cfg.queue_capacity:
                 t.status = REJECTED
                 self.n_rejected += 1
+                if REGISTRY.enabled:
+                    REGISTRY.count("serve.rejected")
                 if t._event is not None:
                     t._event.set()
                 return t
@@ -263,6 +266,9 @@ class GroupCommitScheduler:
                 ST_CUT, t0=_t0, t1=time.perf_counter(),
                 n_txn=len(cut), aux=len(self._queue),
             )
+        if REGISTRY.enabled:
+            REGISTRY.gauge_set("serve.queue_depth", float(len(self._queue)))
+            REGISTRY.count("serve.cut_txns", len(cut))
         return cut
 
     def _execute(self, cut: List[Ticket], now: float) -> None:
@@ -288,12 +294,16 @@ class GroupCommitScheduler:
                 if t.attempts > self.cfg.max_retries:
                     t.status = ABORTED
                     self.n_aborted += 1
+                    if REGISTRY.enabled:
+                        REGISTRY.count("serve.aborted")
                     if t._event is not None:
                         t._event.set()
                     continue
                 # retry with exponential backoff; the spec is regenerated at
                 # re-queue time so observed SSNs / derived values are fresh
                 self.n_retries += 1
+                if REGISTRY.enabled:
+                    REGISTRY.count("serve.retries")
                 backoff = (
                     self.cfg.backoff_steps
                     if not self._threaded
@@ -354,6 +364,11 @@ class GroupCommitScheduler:
                 ST_ACK, txn_lo=ready[0].ssn, txn_hi=ready[-1].ssn,
                 t0=_t0, t1=time.perf_counter(), n_txn=len(ready),
             )
+        if REGISTRY.enabled:
+            REGISTRY.count("serve.acked", len(ready))
+            # units follow the scheduler clock: steps (stepped) or seconds
+            REGISTRY.observe_many("serve.ack_latency",
+                                  [t.latency() for t in ready])
         return len(ready)
 
     # --- stepped mode -------------------------------------------------------

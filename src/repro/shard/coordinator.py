@@ -47,6 +47,7 @@ from ..core.txn import Txn
 from ..db.batch import TxnSpec
 from ..db.occ import TidStripe
 from ..trace.span import ST_XPREPARE, TRACER
+from ..obs.metrics import REGISTRY
 from .router import Router
 
 
@@ -141,12 +142,16 @@ class CrossShardCoordinator:
                 rows = np.concatenate([rd_rows[p], wr_rows[p]])
                 if table.locked_rows(rows).any():
                     self.aborts += 1
+                    if REGISTRY.enabled:
+                        REGISTRY.count("shard.xprepare.aborts")
                     return None
                 obs = np.asarray(rd_obs[p], dtype=np.int64)
                 if len(obs) and (
                     (obs >= 0) & (table.ssn[rd_rows[p]] != obs)
                 ).any():
                     self.aborts += 1
+                    if REGISTRY.enabled:
+                        REGISTRY.count("shard.xprepare.aborts")
                     return None
 
             # --- sequence: shared base, one record per participant -------
@@ -209,6 +214,8 @@ class CrossShardCoordinator:
         with self.lock:
             self.pending.append(xt)
         self.prepared += 1
+        if REGISTRY.enabled:
+            REGISTRY.observe("shard.xprepare_s", xt.t_precommit - t_start)
         return xt
 
     # --- commit -------------------------------------------------------------

@@ -37,6 +37,7 @@ from ..core.checkpoint import load_latest_checkpoint
 from ..core.par import parallel_for
 from ..core.recovery import (
     RecoveredState,
+    RecoveryReport,
     _replay_scalar,
     compute_rsne,
     device_ssn_floors,
@@ -57,6 +58,19 @@ class ShardedRecoveredState:
     shards: List[RecoveredState] = field(default_factory=list)
     n_cross_seen: int = 0        # distinct gtids observed in any log
     n_cross_dropped: int = 0     # gtids dropped by the consistent cut
+
+    def report_dict(self) -> Dict:
+        """Aggregate of the per-shard :class:`RecoveryReport`s plus the
+        cut statistics (the sharded counterpart of ``state.report``)."""
+        return {
+            "n_shards": len(self.shards),
+            "n_cross_seen": self.n_cross_seen,
+            "n_cross_dropped": self.n_cross_dropped,
+            "shards": [
+                st.report.to_dict() if st.report is not None else None
+                for st in self.shards
+            ],
+        }
 
     @property
     def data(self) -> Dict[bytes, Tuple[bytes, int]]:
@@ -158,9 +172,18 @@ def recover_sharded(
     # single-engine path parallelizes over devices; within a shard the
     # decode is per (device, sealed segment) — see load_columnar_segmented)
     shard_logs: List[List[ColumnarLog]] = [None] * n  # type: ignore[list-item]
+    seg_rows: List[List[Dict]] = [[] for _ in range(n)]
+
+    import time as _time
+
+    decode_s = [0.0] * n
 
     def _load(p: int) -> None:
-        shard_logs[p] = load_columnar_segmented(shard_devices[p], parallel=False)
+        t0 = _time.perf_counter()
+        shard_logs[p] = load_columnar_segmented(
+            shard_devices[p], parallel=False, segments=seg_rows[p]
+        )
+        decode_s[p] = _time.perf_counter() - t0
 
     parallel_for(n, _load, parallel)
 
@@ -181,11 +204,14 @@ def recover_sharded(
     )
     for p in range(n):
         st = RecoveredState(rsne=rsne[p])
+        n_ckpt_keys = 0
         if checkpoint_dirs is not None and checkpoint_dirs[p] is not None:
             ckpt = load_latest_checkpoint(checkpoint_dirs[p], parallel=parallel)
             if ckpt is not None:
                 st.rsns = ckpt.rsn
                 st.data.update(ckpt.data)
+                n_ckpt_keys = len(ckpt.data)
+        t_rep = _time.perf_counter()
         data, n_replayed, n_skipped = replay_columnar(
             shard_logs[p],
             rsne[p],
@@ -196,6 +222,27 @@ def recover_sharded(
         st.data = data
         st.n_replayed = n_replayed
         st.n_skipped_uncommitted = n_skipped
+        # the cut's drops land in n_skipped along with the local Qwr rule's;
+        # split them back out for the report by re-counting the cut mask
+        n_cut_dropped = sum(
+            int((~m[log.x_rec]).sum())
+            for log, m in zip(shard_logs[p], masks[p])
+            if m is not None and log.x_rec is not None
+        )
+        st.report = RecoveryReport(
+            mode=mode,
+            n_devices=len(shard_devices[p]),
+            rsns=st.rsns,
+            rsne=rsne[p],
+            n_decoded=sum(lg.n_records for lg in shard_logs[p]),
+            n_replayed=n_replayed,
+            n_dropped_above_rsne=n_skipped - n_cut_dropped,
+            n_dropped_not_durable_all=n_cut_dropped,
+            checkpoint_keys=n_ckpt_keys,
+            decode_s=decode_s[p],
+            replay_s=_time.perf_counter() - t_rep,
+            segments=seg_rows[p],
+        )
         out.shards.append(st)
     return out
 

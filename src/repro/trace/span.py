@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import json
 import threading
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional
 
@@ -148,9 +149,15 @@ class TraceDump:
         d["t1"] = self.t1.tolist()
         return d
 
-    def save(self, path: str) -> None:
+    def save(self, path: str, extra: Optional[Dict] = None) -> None:
+        """Write the dump as JSON; ``extra`` merges additional top-level
+        keys (e.g. ``run_metadata()`` provenance stamps — ``from_dict``
+        ignores keys it does not know, so stamped dumps stay loadable)."""
+        d = self.to_dict()
+        if extra:
+            d.update(extra)
         with open(path, "w") as f:
-            json.dump(self.to_dict(), f)
+            json.dump(d, f)
             f.write("\n")
 
     @classmethod
@@ -228,6 +235,13 @@ class Tracer:
             i = self.n % self.capacity
             if self.n >= self.capacity:
                 self.dropped += 1
+                # drops silently skew any cost model fit on the dump; keep
+                # them visible in the online registry too (lazy import: the
+                # obs package depends on trace, not vice versa)
+                from ..obs.metrics import REGISTRY
+
+                if REGISTRY.enabled:
+                    REGISTRY.count("trace.ring_drops")
             self._stage[i] = stage
             self._shard[i] = shard
             self._device[i] = device
@@ -242,7 +256,20 @@ class Tracer:
             self.n += 1
 
     def dump(self) -> TraceDump:
-        """Snapshot the recorded rows oldest-first (ring order unwound)."""
+        """Snapshot the recorded rows oldest-first (ring order unwound).
+
+        Warns when the ring wrapped: a dump with drops under-represents the
+        oldest stages, so durations fit from it (``CostModel.fit``) are
+        biased — re-trace with a larger ``enable(capacity=...)`` instead.
+        """
+        if self.dropped:
+            warnings.warn(
+                f"trace ring dropped {self.dropped} spans (capacity "
+                f"{self.capacity}); the dump is a biased sample — re-trace "
+                f"with a larger enable(capacity=...) before fitting",
+                RuntimeWarning,
+                stacklevel=2,
+            )
         with self._lock:
             k = min(self.n, self.capacity)
             if self.n <= self.capacity:

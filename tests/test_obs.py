@@ -1,0 +1,378 @@
+"""Metrics registry semantics: sketch accuracy, the disarmed zero-cost
+contract, armed-overhead bounds, and the health monitors.
+
+The load-bearing guarantees pinned here (mirroring ``test_trace.py``):
+
+* the disarmed registry allocates nothing — a tight serve loop with
+  ``REGISTRY.enabled == False`` must not allocate a single block in
+  ``obs/metrics.py`` (tracemalloc-filtered);
+* armed overhead on the fig5-style batch loop stays under 3%, measured
+  with the alternating-window max estimator (host noise only ever
+  deflates a window);
+* sketch quantiles stay within the log2 bucket bound (a factor of 2 of
+  ``numpy.percentile``) while count/sum/min/max are exact.
+"""
+
+import math
+import time
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, PoplarEngine
+from repro.db import ArrayTable, BatchOCC, TxnSpec
+from repro.db.ycsb import key_of
+from repro.obs import REGISTRY, QuantileSketch, disable, enable
+from repro.obs.health import (
+    CRIT,
+    WARN,
+    HealthMonitor,
+    ReplicaLagMonitor,
+    SaturationMonitor,
+    TruncationStallMonitor,
+)
+from repro.serve import GroupCommitScheduler, ServeConfig, SingleBackend
+
+
+@pytest.fixture(autouse=True)
+def _disarm():
+    """Every test leaves the process registry disarmed and empty."""
+    yield
+    REGISTRY.enabled = False
+    REGISTRY.reset()
+
+
+# --- quantile sketch ----------------------------------------------------------
+
+def test_sketch_exact_moments():
+    sk = QuantileSketch()
+    vals = [0.5, 2.0, 2.0, 8.0, 0.125]
+    for v in vals:
+        sk.record(v)
+    assert sk.count == len(vals)
+    assert sk.total == pytest.approx(sum(vals))
+    assert sk.vmin == min(vals) and sk.vmax == max(vals)
+    assert sk.mean() == pytest.approx(sum(vals) / len(vals))
+
+
+def test_sketch_quantiles_within_bucket_bound():
+    """p50/p90/p99 within the factor-of-2 log2-bucket guarantee of the true
+    sample percentiles, across magnitudes from microseconds to seconds."""
+    rng = np.random.default_rng(42)
+    vals = rng.lognormal(mean=-7.0, sigma=2.0, size=20_000)  # ~1us .. ~1s
+    sk = QuantileSketch()
+    sk.record_many(vals)
+    for q in (0.50, 0.90, 0.99):
+        truth = float(np.percentile(vals, 100 * q))
+        got = sk.quantile(q)
+        assert 0.5 * truth <= got <= 2.0 * truth, (q, truth, got)
+    # extreme quantiles clamp to the exact observed range
+    assert sk.quantile(0.0) >= float(vals.min())
+    assert sk.quantile(1.0) == pytest.approx(float(vals.max()))
+
+
+def test_sketch_record_many_equals_looped_record():
+    rng = np.random.default_rng(7)
+    vals = np.concatenate([
+        rng.lognormal(size=500), [0.0, -1.0, 1e-30, 1e30]])
+    a, b = QuantileSketch(), QuantileSketch()
+    for v in vals:
+        a.record(float(v))
+    b.record_many(vals)
+    assert a.counts.tolist() == b.counts.tolist()
+    assert a.count == b.count
+    assert a.total == pytest.approx(b.total)
+    assert (a.vmin, a.vmax) == (b.vmin, b.vmax)
+
+
+def test_sketch_empty_and_reset():
+    sk = QuantileSketch()
+    assert sk.quantile(0.5) == 0.0 and sk.summary() == {"count": 0}
+    sk.record(3.0)
+    sk.reset()
+    assert sk.count == 0 and sk.summary() == {"count": 0}
+
+
+# --- registry ----------------------------------------------------------------
+
+def test_registry_counters_gauges_sketches_snapshot():
+    enable()
+    REGISTRY.count("c.a")
+    REGISTRY.count("c.a", 4)
+    REGISTRY.gauge_set("g.x", 0.5)
+    REGISTRY.gauge_max("g.x", 0.25)       # lower: no change
+    REGISTRY.gauge_max("g.y", 2.0)
+    REGISTRY.observe("s.lat", 0.010)
+    REGISTRY.observe_many("s.lat", [0.020, 0.040])
+    snap = disable()
+    assert snap["counters"]["c.a"] == 5
+    assert snap["gauges"]["g.x"] == 0.5 and snap["gauges"]["g.y"] == 2.0
+    assert snap["sketches"]["s.lat"]["count"] == 3
+    assert snap["sketches"]["s.lat"]["min"] == pytest.approx(0.010)
+    # deterministic ordering
+    assert list(snap["counters"]) == sorted(snap["counters"])
+
+
+def test_registry_callback_gauges_are_snapshot_sampled_and_guarded():
+    enable()
+    REGISTRY.register_callback("cb.good", lambda: 7.0)
+    REGISTRY.register_callback("cb.bad", lambda: 1 / 0)
+    snap = REGISTRY.snapshot()
+    assert snap["gauges"]["cb.good"] == 7.0
+    assert "callback error" in snap["gauges"]["cb.bad"]
+    REGISTRY.unregister_callback("cb.good")
+    REGISTRY.unregister_callback("cb.bad")
+    assert "cb.good" not in REGISTRY.snapshot()["gauges"]
+
+
+# --- disarmed zero-cost contract ---------------------------------------------
+
+def _stepped_sched(tmp_path, sub="a"):
+    cfg = EngineConfig(n_buffers=2, device_kind="null",
+                       device_dir=str(tmp_path / sub))
+    backend = SingleBackend.make("vectorized", n_workers=2, cfg=cfg)
+    return GroupCommitScheduler(
+        backend, ServeConfig(max_batch=16, latency_budget_steps=1)
+    )
+
+
+def test_disarmed_registry_allocates_nothing(tmp_path):
+    """tracemalloc filtered to obs/metrics.py: a tight submit+step loop with
+    the registry disarmed must not allocate a single block in the metrics
+    module (every hook reduces to one attribute load + a false branch)."""
+    sched = _stepped_sched(tmp_path)
+    for i in range(32):
+        sched.submit(TxnSpec(writes=[(key_of(i), b"w")]))
+    sched.step()  # warm up every code path before measuring
+
+    assert not REGISTRY.enabled
+    flt = tracemalloc.Filter(True, "*obs/metrics.py")
+    tracemalloc.start()
+    try:
+        for i in range(32, 160):
+            sched.submit(TxnSpec(writes=[(key_of(i), b"w")]))
+            sched.step()
+        snap = tracemalloc.take_snapshot().filter_traces([flt])
+    finally:
+        tracemalloc.stop()
+    assert sum(s.size for s in snap.statistics("filename")) == 0
+
+
+def test_disarmed_registry_records_nothing(tmp_path):
+    sched = _stepped_sched(tmp_path)
+    for i in range(8):
+        sched.submit(TxnSpec(writes=[(key_of(i), b"w")]))
+    sched.run_until_drained()
+    snap = REGISTRY.snapshot()
+    assert not snap["counters"] and not snap["gauges"] and not snap["sketches"]
+
+
+# --- armed coverage across the layers ----------------------------------------
+
+def test_armed_serve_run_populates_every_layer(tmp_path):
+    enable()
+    try:
+        sched = _stepped_sched(tmp_path)
+        for i in range(64):
+            sched.submit(TxnSpec(writes=[(key_of(i % 40), bytes([i % 251]))]))
+            if i % 4 == 3:
+                sched.step()
+        sched.run_until_drained()
+    finally:
+        snap = disable()
+    c, g, s = snap["counters"], snap["gauges"], snap["sketches"]
+    assert c["serve.cut_txns"] >= 64
+    assert c["serve.acked"] >= 1
+    assert c["occ.validate.wins"] >= 64
+    assert c["engine.flush_txns.d0"] + c["engine.flush_txns.d1"] > 0
+    assert c["engine.flush_bytes.d0"] > 0
+    assert "serve.queue_depth" in g
+    assert "engine.buffer_occupancy.d0" in g
+    assert s["serve.ack_latency"]["count"] >= 1
+
+
+# --- armed overhead on the fig5-style batch loop ------------------------------
+
+def _overhead_trial(tmp_path, sub):
+    """One armed-vs-disarmed overhead estimate on a live BatchOCC loop.
+
+    Per-batch wall times with the registry alternately off/on on the same
+    engine + prebuilt specs; the MIN batch per arm is the robust estimator
+    (host noise — GIL quanta, steal time — only ever *inflates* a batch,
+    while the instrumentation cost, if any, is deterministic per batch)."""
+    d = tmp_path / sub
+    d.mkdir()
+    eng = PoplarEngine(EngineConfig(n_buffers=2, device_kind="null",
+                                    device_dir=str(d), flush_interval=60.0))
+    table = ArrayTable()
+    keys = [key_of(i) for i in range(2048)]
+    for k in keys:
+        table.insert(k, b"seed")
+    occ = BatchOCC(table, eng, n_workers=2)
+    eng.start()
+    try:
+        batches = [
+            [TxnSpec(writes=[(keys[(b * 256 + i) % len(keys)], b"v")])
+             for i in range(256)]
+            for b in range(8)
+        ]
+        for sp in batches:                 # warm-up: jit compiles, allocs
+            occ.execute_batch(sp, max_rounds=2)
+            occ.drain()
+        off, on = [], []
+        for rep in range(8):
+            armed = rep % 2 == 1
+            if armed:
+                enable(reset=False)
+            else:
+                REGISTRY.enabled = False
+            for sp in batches:
+                t0 = time.perf_counter()
+                occ.execute_batch(sp, max_rounds=2)
+                occ.drain()
+                (on if armed else off).append(time.perf_counter() - t0)
+        REGISTRY.enabled = False
+    finally:
+        eng.stop()
+    return min(on) / min(off) - 1.0
+
+
+def test_armed_overhead_under_3pct(tmp_path):
+    """The fig5-style batch loop pays < 3% for an armed registry.  The
+    shared bench box swings batch times several-fold, so one estimate can
+    read high on pure noise: up to 4 independent trials, passing on the
+    first clean one — a *real* >3% regression is deterministic per batch
+    and fails every trial."""
+    best = math.inf
+    for trial in range(4):
+        best = min(best, _overhead_trial(tmp_path, f"ov{trial}"))
+        if best < 0.03:
+            break
+    assert best < 0.03, f"armed registry overhead {best:.1%} (all trials)"
+    # and the armed windows actually measured something
+    assert REGISTRY.counter_value("occ.validate.wins") > 0
+
+
+# --- health monitors ----------------------------------------------------------
+
+class _FakeReplica:
+    def __init__(self, frontier=100, visible=90, backlog=0, stalled_s=0.0):
+        self._frontier = frontier
+        self._visible = visible
+        self._backlog = backlog
+        self._w_advance_t = time.monotonic() - stalled_s
+
+    def shipped_frontiers(self):
+        return [self._frontier]
+
+    def visible_ssn(self):
+        return self._visible
+
+    def lag_bytes(self):
+        return self._backlog
+
+
+class _FakeRegistry:
+    def frontiers(self):
+        return {"ckpt": 5}
+
+
+class _FakeTruncator:
+    def __init__(self, pin=0):
+        self.pin = pin
+        self.registry = _FakeRegistry()
+
+    def stall_ssn(self):
+        return self.pin
+
+
+class _FakeBackend:
+    def __init__(self, sat=False):
+        self._sat = sat
+
+    def saturated(self):
+        return self._sat
+
+    def queue_depths(self):
+        return [3, 4]
+
+
+class _FakeScheduler:
+    def __init__(self):
+        self.n_rejected = 0
+        self.backend = _FakeBackend()
+
+
+def test_replica_lag_monitor_thresholds():
+    m = ReplicaLagMonitor(_FakeReplica(frontier=100, visible=90),
+                          max_lag_ssn=5, max_lag_s=None)
+    evs = m.check()
+    assert len(evs) == 1 and evs[0].severity == CRIT
+    assert evs[0].kind == "replica_lag" and evs[0].value == 10.0
+    # within SLO: silent
+    assert not ReplicaLagMonitor(
+        _FakeReplica(frontier=100, visible=98), max_lag_ssn=5).check()
+    # stalled watermark + backlog are WARNs
+    m2 = ReplicaLagMonitor(
+        _FakeReplica(frontier=5, visible=5, backlog=1 << 20, stalled_s=10.0),
+        max_lag_s=1.0, max_backlog_bytes=1024)
+    kinds = [(e.severity, e.kind) for e in m2.check()]
+    assert kinds == [(WARN, "replica_lag"), (WARN, "replica_lag")]
+
+
+def test_truncation_stall_monitor_requires_sustained_pin():
+    tr = _FakeTruncator(pin=7)
+    m = TruncationStallMonitor(tr, sustain=2)
+    assert m.check() == []            # first sighting: not yet a stall
+    evs = m.check()                   # second consecutive: CRIT
+    assert len(evs) == 1 and evs[0].severity == CRIT
+    assert "ckpt" in evs[0].message
+    tr.pin = 0
+    assert m.check() == []            # pin released: streak resets
+    tr.pin = 7
+    assert m.check() == []
+
+
+def test_saturation_monitor_sustained_rejects():
+    sched = _FakeScheduler()
+    m = SaturationMonitor(sched, sustain=2)
+    assert m.check() == []            # no rejects
+    sched.n_rejected = 3
+    assert m.check() == []            # first rejecting window
+    sched.n_rejected = 9
+    evs = m.check()                   # second consecutive: CRIT
+    assert len(evs) == 1 and evs[0].severity == CRIT
+    sched.backend._sat = True
+    sched.n_rejected = 9              # delta 0: streak resets, but WARN fires
+    evs = m.check()
+    assert [e.severity for e in evs] == [WARN]
+
+
+def test_health_monitor_aggregates_and_mirrors_counters():
+    events = []
+    hm = HealthMonitor(
+        [TruncationStallMonitor(_FakeTruncator(pin=3), sustain=1)],
+        on_event=events.append,
+    )
+    enable()
+    try:
+        evs = hm.poll()
+    finally:
+        REGISTRY.enabled = False
+    assert len(evs) == 1 and events == evs
+    assert list(hm.history) == evs
+    assert REGISTRY.counter_value("health.events.truncation_stall") == 1
+    assert evs[0].to_dict()["kind"] == "truncation_stall"
+
+
+def test_health_monitor_threaded_start_stop():
+    hm = HealthMonitor(
+        [TruncationStallMonitor(_FakeTruncator(pin=1), sustain=1)])
+    hm.start(poll_interval=1e-3)
+    deadline = time.monotonic() + 5.0
+    while hm.n_polls < 3 and time.monotonic() < deadline:
+        time.sleep(1e-3)
+    hm.stop()
+    assert hm.n_polls >= 3
+    assert any(e.kind == "truncation_stall" for e in hm.history)

@@ -1,0 +1,282 @@
+"""Crash flight recorder + recovery forensics, end-to-end.
+
+The acceptance contract pinned here: a kill mid-stream produces a
+``*.flight.json`` dump, and ``explain_recovery()`` over the surviving
+device bytes assigns **every** gtid in the log a verdict (kept/dropped +
+which §5 rule) that byte-agrees with what ``recover()`` /
+``recover_sharded()`` actually kept — checked with
+``RecoveryExplanation.verify_bytes``, which replays only the verdict-kept
+records and compares images dict-for-dict.
+
+The kill idiom mirrors ``test_crash_injection.py``: real-clock file-backed
+devices, ``engine.stop()`` as the crash point (volatile ring contents are
+lost), plus physically injected tail bytes — a torn frame (interrupted
+flush) and, for rule coverage, records durable on *some* devices only
+(a HAS_READS record above RSNe; a cross-shard record missing one
+participant).
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.core import EngineConfig, PoplarEngine, Txn, Worker, recover
+from repro.db import TxnSpec
+from repro.obs import REGISTRY, enable
+from repro.obs.flight import FlightRecorder, load_flight
+from repro.obs.forensics import (
+    RULE_ABOVE_RSNE,
+    RULE_NOT_DURABLE,
+    RULE_REPLAYED,
+    RULE_TORN_TAIL,
+    explain_recovery,
+    explain_recovery_sharded,
+)
+from repro.shard import ShardedConfig, ShardedEngine, recover_sharded
+
+_SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+@pytest.fixture(autouse=True)
+def _disarm():
+    yield
+    REGISTRY.enabled = False
+    REGISTRY.reset()
+
+
+def _record(tid, ssn, key, val, reads=False, xdep=None) -> bytes:
+    t = Txn(tid=tid, write_set=[(key, val)],
+            read_set=[("dep", 0)] if reads else [], xdep=xdep)
+    t.ssn = ssn
+    return t.encode()
+
+
+def _torn_record(key: str, cut: int = 7) -> bytes:
+    rec = _record(777777, 1 << 40, key, b"TORN-NEVER-COMMITTED")
+    assert cut < len(rec)
+    return rec[:-cut]
+
+
+class _Cell:
+    __slots__ = ("ssn",)
+
+    def __init__(self):
+        self.ssn = 0
+
+
+# --- flight recorder ----------------------------------------------------------
+
+def test_flight_dump_roundtrip(tmp_path):
+    enable()
+    REGISTRY.count("unit.events", 3)
+    REGISTRY.observe("unit.lat", 0.25)
+    rec = FlightRecorder(str(tmp_path / "run"))
+    path = rec.dump("unit-test")
+    assert path.endswith(".flight.json") and os.path.exists(path)
+    d = load_flight(path)
+    assert d["schema"] == 1
+    assert d["reason"] == "unit-test"
+    assert d["pid"] == os.getpid()
+    assert d["metrics"]["counters"]["unit.events"] == 3
+    assert d["metrics"]["sketches"]["unit.lat"]["count"] == 1
+    assert "trace" in d
+    # dumps are atomic full rewrites: a second dump supersedes the first
+    rec.dump("second")
+    assert load_flight(path)["reason"] == "second"
+    assert rec.n_dumps == 2
+
+
+def test_flight_sigterm_writes_dump(tmp_path):
+    """A killed process leaves a loadable flight dump behind (the installed
+    SIGTERM handler snapshots, then chains to the default and dies)."""
+    target = tmp_path / "crash"
+    child = textwrap.dedent(f"""
+        import time
+        from repro.obs import REGISTRY, enable
+        from repro.obs.flight import FlightRecorder
+        enable()
+        REGISTRY.count("child.alive")
+        FlightRecorder({str(target)!r}).install()
+        print("READY", flush=True)
+        time.sleep(30)
+    """)
+    env = dict(os.environ, PYTHONPATH=_SRC, JAX_PLATFORMS="cpu")
+    proc = subprocess.Popen([sys.executable, "-c", child],
+                            stdout=subprocess.PIPE, env=env, text=True)
+    try:
+        assert proc.stdout.readline().strip() == "READY"
+        proc.send_signal(signal.SIGTERM)
+        proc.wait(timeout=15)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    assert proc.returncode != 0  # the handler re-raises: the kill still kills
+    d = load_flight(str(target) + ".flight.json")
+    assert d["reason"] == "signal:SIGTERM"
+    assert d["pid"] == proc.pid
+    assert d["metrics"]["counters"]["child.alive"] == 1
+
+
+# --- single-shard: kill mid-stream, then explain what recover() kept ---------
+
+def test_single_shard_kill_forensics_byte_agree(tmp_path):
+    dev_dir = tmp_path / "devs"
+    dev_dir.mkdir()
+    cfg = EngineConfig(n_buffers=2, device_kind="ssd",
+                       device_dir=str(dev_dir), device_clock="real",
+                       flush_interval=1e-3, logger_poll=1e-4)
+    engine = PoplarEngine(cfg)
+    enable()
+    rec = FlightRecorder(str(tmp_path / "crash"))
+    engine.start()
+    try:
+        workers = [Worker(engine, i) for i in range(2)]
+        cells = {f"k{i}": _Cell() for i in range(30)}
+        txns = []
+        for i in range(60):
+            t = Txn(tid=1000 + i)
+            key = f"k{i % 30}"
+            t.write_set = [(key, f"v{i}".encode())]
+            if i % 4 == 0:        # a quarter of the stream carries reads
+                t.read_set = [(key, cells[key].ssn)]
+            workers[i % 2].run(t, [], [cells[key]])
+            txns.append(t)
+        engine.quiesce(range(2))
+        assert all(t.committed for t in txns)
+    finally:
+        engine.stop()             # the kill: volatile ring contents are lost
+    # writes buffered after the kill never reach a device
+    for i in range(5):
+        t = Txn(tid=5000 + i)
+        t.write_set = [(f"k{i}", f"lost{i}".encode())]
+        workers[i % 2].run(t, [], [cells[f"k{i}"]])
+    flight_path = rec.dump("kill:mid-stream")
+    for d in engine.devices:
+        d.close()
+
+    # physically injected crash tail on device 0: a HAS_READS record durable
+    # on one device only (ssn far above RSNe, which the other devices pin
+    # down), then a torn frame from an interrupted flush
+    with open(os.path.join(str(dev_dir), "log_0.bin"), "ab") as f:
+        f.write(_record(888888, 1 << 39, "k0", b"ABOVE-RSNE", reads=True))
+        f.write(_torn_record("k0"))
+        f.flush()
+        os.fsync(f.fileno())
+
+    state = recover(engine.devices, parallel=False)
+    ex = explain_recovery(engine.devices, flight=flight_path)
+
+    # every committed gtid has a kept verdict; the injected ones are named
+    for t in txns:
+        v = ex.verdicts[t.tid]
+        assert v.kept and v.rule == RULE_REPLAYED
+        assert v.has_reads == bool(t.read_set)
+    assert not ex.verdicts[888888].kept
+    assert ex.verdicts[888888].rule == RULE_ABOVE_RSNE
+    assert not ex.verdicts[777777].kept
+    assert ex.verdicts[777777].rule == RULE_TORN_TAIL
+    assert ex.torn and ex.torn[0]["gtid"] == 777777
+    # no verdict for the never-flushed tail: those bytes do not exist
+    assert all(5000 + i not in ex.verdicts for i in range(5))
+
+    # the headline acceptance: replaying exactly the verdict-kept records
+    # reproduces recover()'s image byte-for-byte
+    agrees, bad = ex.verify_bytes(state)
+    assert agrees, bad
+    kept = sum(1 for v in ex.verdicts.values() if v.kept)
+    assert kept == len(txns) == state.report.n_replayed
+    assert state.report.n_dropped_above_rsne == 1
+    assert state.report.mode == "vectorized"
+    assert state.report.to_dict()["n_devices"] == len(engine.devices)
+
+    # crash context from the flight dump is folded into the rendering
+    assert ex.flight["reason"] == "kill:mid-stream"
+    out = ex.render()
+    assert "kill:mid-stream" in out and RULE_TORN_TAIL in out
+    json.dumps(ex.to_dict())  # the whole explanation is JSON-serializable
+
+
+# --- 2-shard: the consistent cut, explained ----------------------------------
+
+def test_two_shard_kill_forensics_byte_agree(tmp_path):
+    eng = ShardedEngine(ShardedConfig(
+        n_shards=2, n_buffers=1, n_workers=2, device_kind="ssd",
+        device_dir=str(tmp_path), device_clock="real",
+    ))
+    enable()
+    rec = FlightRecorder(str(tmp_path / "crash2"))
+    keys = [f"user{i:010d}" for i in range(24)]
+    gtids = []
+    eng.start()
+    try:
+        by_shard = [[], []]
+        for k in keys:
+            by_shard[eng.shard_of(k)].append(k)
+        assert by_shard[0] and by_shard[1]
+        for r in range(3):
+            specs = [TxnSpec(writes=[(k, f"{k}r{r}".encode())]) for k in keys]
+            specs.append(TxnSpec(
+                writes=[(by_shard[0][0], f"x0r{r}".encode()),
+                        (by_shard[1][0], f"x1r{r}".encode())],
+            ))
+            res = eng.execute_batch(specs)
+            assert not res.aborted
+            eng.quiesce()
+            gtids += [t.tid for t in res.committed]
+            gtids += [x.gtid for x in res.cross]
+            cross_gtids = [x.gtid for x in res.cross]
+    finally:
+        eng.stop()                # the kill
+    flight_path = rec.dump("kill:2shard")
+    for devs in eng.devices:
+        for d in devs:
+            d.close()
+
+    # crash tail on shard 0: a cross-shard record whose shard-1 twin never
+    # made it out of the ring — durable on one participant only
+    with open(os.path.join(str(tmp_path), "shard0", "log_0.bin"), "ab") as f:
+        f.write(_record(999999, 1 << 39, by_shard[0][0], b"X-NEVER",
+                        xdep=[(0, 1 << 39), (1, 1 << 39)]))
+        f.flush()
+        os.fsync(f.fileno())
+    # and a torn frame at the tail of shard 1's device
+    with open(os.path.join(str(tmp_path), "shard1", "log_0.bin"), "ab") as f:
+        f.write(_torn_record(by_shard[1][0]))
+        f.flush()
+        os.fsync(f.fileno())
+
+    st = recover_sharded(eng.devices, parallel=False)
+    ex = explain_recovery_sharded(eng.devices, flight=flight_path)
+
+    assert ex.n_shards == 2 and len(ex.rsne) == 2
+    for g in gtids:
+        assert ex.verdicts[g].kept and ex.verdicts[g].rule == RULE_REPLAYED
+    # the kept cross records carry their per-participant SSN vector
+    for g in cross_gtids:
+        assert set(ex.verdicts[g].ssn) == {0, 1}
+    v = ex.verdicts[999999]
+    assert not v.kept and v.rule == RULE_NOT_DURABLE
+    assert "shard(s) [1]" in v.detail
+    assert not ex.verdicts[777777].kept
+    assert ex.verdicts[777777].rule == RULE_TORN_TAIL
+
+    agrees, bad = ex.verify_bytes(st)
+    assert agrees, bad
+    assert b"X-NEVER" not in {val for val, _ in st.data.items()}
+
+    rep = st.report_dict()
+    assert rep["n_shards"] == 2
+    assert rep["n_cross_dropped"] == 1    # the injected half-commit
+    # a kept cross gtid replays one record per participant shard
+    assert sum(s["n_replayed"] for s in rep["shards"]) == \
+        sum(len(x.ssn) for x in ex.verdicts.values() if x.kept)
+    assert ex.flight["reason"] == "kill:2shard"
+    out = ex.render()
+    assert RULE_NOT_DURABLE in out and "2 shard(s)" in out
+    json.dumps(ex.to_dict())
