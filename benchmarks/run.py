@@ -34,6 +34,7 @@ BENCH_NAMES = [
     "fig_shard_scalability",
     "fig_replication",
     "fig_truncation",
+    "fig_adaptive",
     "fig_serve",
     "fig_kernels",
     "fig_trace",

@@ -395,10 +395,98 @@ def _framed_len(txn: Txn) -> int:
     for key, val in txn.write_set:
         kb = key.encode() if isinstance(key, str) else bytes(key)
         n += 8 + len(kb) + len(val)
+    if txn.cmd_op is not None:
+        # command footer: u32 op + u32 n_deps + per dep (u32 klen + key + u64)
+        n += 8
+        for key, _ in txn.cmd_deps or []:
+            kb = key.encode() if isinstance(key, str) else bytes(key)
+            n += 12 + len(kb)
     if txn.xdep is not None:
         # cross-shard footer: u32 n_parts + per part (u32 shard + u64 ssn)
         n += 4 + 12 * len(txn.xdep)
     return n
+
+
+class AdaptivePolicy:
+    """Per-record command-vs-value framing choice (adaptive logging).
+
+    A winner transaction may be *command-framed* — logging ``(op id, param)``
+    per write plus the observed pre-image SSNs instead of full value
+    payloads — iff every clause holds:
+
+    * its spec names a registered op (``cmd_op in registry``);
+    * it is shard-local (``xdep is None`` — a cross-shard record's deps live
+      on other shards where this shard's recovery cannot re-execute them, so
+      ``FLAG_XSHARD`` always ships values);
+    * every written key carries an observed pre-image SSN (the spec read it:
+      deps mirror the write chain one-to-one), so each dep is SSN-covered:
+      deps at or below the latest checkpoint RSN are covered by the fuzzy
+      checkpoint image (image version of any key ≥ any version < RSN), and
+      deps above it live in log segments no sound safe point may drop (safe
+      ≤ checkpoint RSN, see ``repro.core.truncate``);
+    * a dep SSN of **0** — a key loaded into the table before any logged
+      write touched it — is only covered when a checkpoint image exists
+      (initial loads are in no log), so without one those records stay
+      value-framed.
+
+    ``force_value`` pins everything to value framing (the pure-value oracle
+    of the crash-equivalence tests and the bench's value arm);
+    ``force_command`` inverts the escape hatch for the bench's pure-command
+    arm (records that *can't* be command-framed still fall back to value —
+    the hatch is about eligibility, not a third wire format).
+
+    ``refresh()`` re-probes the checkpoint directory for the latest RSN —
+    the policy input that classifies each dep as image-covered vs
+    log-covered (surfaced as metrics; the soundness argument above is why
+    both classes stay replayable).
+    """
+
+    def __init__(
+        self,
+        checkpoint_dir: Optional[str] = None,
+        registry=None,
+        force_value: bool = False,
+        force_command: bool = False,
+    ):
+        if registry is None:
+            from .command import COMMANDS
+            registry = COMMANDS
+        self.registry = registry
+        self.checkpoint_dir = checkpoint_dir
+        self.force_value = force_value
+        self.force_command = force_command
+        self.checkpoint_rsn = 0
+        # a full-image checkpoint exists — required cover for dep SSN 0
+        # (keys loaded before any logged write; they are in no log segment)
+        self.has_checkpoint = False
+
+    def refresh(self) -> int:
+        """Re-read the latest checkpoint RSN (0 when none exists)."""
+        if self.checkpoint_dir is not None:
+            from .checkpoint import load_latest_checkpoint_meta
+            meta = load_latest_checkpoint_meta(self.checkpoint_dir)
+            self.checkpoint_rsn = int(meta["rsn"]) if meta else 0
+            self.has_checkpoint = meta is not None
+        return self.checkpoint_rsn
+
+    def eligible(self, cmd_op: Optional[int], deps: Sequence[int],
+                 xshard: bool = False) -> bool:
+        """May this record be command-framed?  ``deps`` is the per-written-key
+        observed pre-image SSN (``-1`` for a key the spec did not read)."""
+        if self.force_value:
+            return False
+        if cmd_op is None or cmd_op not in self.registry:
+            return False  # forced-value hatch: unregistered op
+        if xshard:
+            return False  # forced-value hatch: FLAG_XSHARD ships values
+        if not len(deps):
+            return False  # nothing to re-execute
+        for d in deps:
+            if d < 0:
+                return False  # blind write: no dep SSN — not covered
+            if d == 0 and not self.has_checkpoint:
+                return False  # initial load, in no log, no image covers it
+        return True
 
 
 class Worker:

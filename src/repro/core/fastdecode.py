@@ -36,6 +36,7 @@ import numpy as np
 from .txn import (
     _HDR,
     _PAYLOAD_FIXED,
+    FLAG_COMMAND,
     FLAG_HAS_READS,
     FLAG_XSHARD,
     frame_scan,
@@ -142,7 +143,11 @@ def decode_fast_tile(buf: bytes, crc: Optional[int] = None) -> Optional[FastTile
     ssn = gather_u64(u8, pay)
     flags = u8[pay + 16].astype(np.int64)      # after u64 ssn + u64 tid
     nw = gather_u32(u8, pay + 17)
-    if (flags & FLAG_XSHARD).any() or (nw > MAX_FAST_WRITES).any():
+    if (
+        (flags & FLAG_XSHARD).any()
+        or (flags & FLAG_COMMAND).any()
+        or (nw > MAX_FAST_WRITES).any()
+    ):
         return None
 
     end = pay + plen                 # payload end per record

@@ -62,7 +62,28 @@ from .txn import (
     decode_records,
 )
 from ..kernels.bucketing import bucket, checked_i32, fits_i32, stack_i32
+from ..obs.metrics import REGISTRY
 from ..trace.span import ST_RDECODE, ST_RREPLAY, TRACER
+
+#: forensics verdict string for a command record whose pre-image is neither
+#: in the retained log nor covered by the checkpoint image (see
+#: ``repro.obs.forensics``)
+REASON_CMD_DEP = "command-dep-unreplayable"
+REASON_CMD_OP = "command-op-unknown"
+
+
+class CommandReplayError(RuntimeError):
+    """A command-framed record cannot be re-executed: its operator is not
+    registered in this process, or its observed pre-image SSN points at
+    state that was truncated away without checkpoint coverage.  A sound
+    pipeline never raises this — the adaptive policy only command-frames
+    records whose dependencies are covered, and the truncators refuse safe
+    points that would strand a retained command's pre-image — so recovery
+    fails loudly instead of guessing a value."""
+
+    def __init__(self, msg: str, reason: str = REASON_CMD_DEP) -> None:
+        super().__init__(msg)
+        self.reason = reason
 
 
 @dataclass
@@ -195,7 +216,11 @@ def _replay_scalar(
                 # idempotent anyway) — skip as an optimization
                 pass
             if rec.write_only or rec.ssn <= rsne:
-                _apply(state, rec, lock)
+                # command records need their pre-image, so they cannot join
+                # the order-free guarded walk: counted here, re-executed in
+                # SSN order after every value record has landed
+                if not rec.is_command:
+                    _apply(state, rec, lock)
                 applied += 1
             else:
                 skipped += 1  # durable but provably uncommitted RAW-dependent
@@ -210,6 +235,181 @@ def _replay_scalar(
 
     state.n_replayed = sum(r[0] for r in results)
     state.n_skipped_uncommitted = sum(r[1] for r in results)
+
+    cmds = [
+        rec
+        for recs in device_records
+        for rec in recs
+        if rec.is_command and (rec.write_only or rec.ssn <= rsne)
+    ]
+    if cmds:
+        cmds.sort(key=lambda r: r.ssn)
+        depth, applied = _apply_command_records(state.data, cmds)
+        if REGISTRY.enabled:
+            REGISTRY.gauge_max("adaptive.replay.cmd_depth", depth)
+            REGISTRY.count("adaptive.replay.commands", applied)
+
+
+# --- command re-execution (adaptive logging) ---------------------------------
+#
+# Command-framed records (FLAG_COMMAND) carry op parameters, not values, so
+# they cannot join the order-free last-writer-wins reduction: each one needs
+# its key's pre-image.  OCC validation gives the ordering theorem that keeps
+# this cheap: a committed command at SSN ``s`` observed its pre-image at SSN
+# ``d`` and *no committed writer of that key exists in (d, s)*.  So after the
+# value pass produces each key's value base (checkpoint image or last value
+# winner at SSN ``V``), the surviving commands on a key are exactly a suffix
+# chain above ``V``: commands with ``s <= V`` are superseded (Thomas rule),
+# and the rest apply in per-key SSN order, each one's pre-image being the
+# running entry.  Execution is batched per dependency level — level ``l`` is
+# the ``l``-th command above its key's base — so independent keys re-execute
+# together and only true chains serialize.
+
+def _exec_command_write(
+    data: Dict[bytes, Tuple[bytes, int]],
+    key: bytes,
+    ssn: int,
+    op_id: int,
+    dep: int,
+    param: bytes,
+    registry,
+    dep_lookup=None,
+) -> bool:
+    """Apply one command write against the running image under the §5 guard.
+    Returns False when the command is superseded by a newer entry; raises
+    :class:`CommandReplayError` when the pre-image is missing (``dep``
+    points below the current entry and nothing covers it)."""
+    cur = data.get(key)
+    if dep_lookup is not None and (cur is None or cur[1] < dep):
+        # the round's reduction may hold an *older* entry than the external
+        # store (a late chunk shipping a superseded write after the dep was
+        # already folded) — take whichever is newer
+        ext = dep_lookup(key)
+        if ext is not None and (cur is None or ext[1] > cur[1]):
+            cur = ext
+    if cur is not None and ssn <= cur[1]:
+        return False                   # superseded by a later (value) winner
+    if op_id not in registry:
+        raise CommandReplayError(
+            f"command record ssn={ssn} key={key!r} uses unregistered op "
+            f"{op_id}", reason=REASON_CMD_OP,
+        )
+    if cur is None or cur[1] < dep:
+        have = "nothing" if cur is None else f"ssn {cur[1]}"
+        raise CommandReplayError(
+            f"command record ssn={ssn} key={key!r} depends on pre-image "
+            f"ssn {dep} but recovery holds {have} — dependency truncated "
+            f"away without checkpoint coverage", reason=REASON_CMD_DEP,
+        )
+    data[key] = (registry.get(op_id).fn(cur[0], param), ssn)
+    return True
+
+
+def _apply_command_records(
+    data: Dict[bytes, Tuple[bytes, int]],
+    recs: Sequence[LogRecord],
+    dep_lookup=None,
+) -> Tuple[int, int]:
+    """Scalar-oracle command pass: re-execute committed command records in
+    global SSN order (which embeds every per-key chain order).  ``recs``
+    must already be filtered by the §5 guard and sorted by SSN.
+
+    Returns ``(max chain depth, writes applied)``.
+    """
+    from .command import COMMANDS
+
+    chain: Dict[bytes, int] = {}
+    depth = applied = 0
+    for rec in recs:
+        deps = rec.cmd_deps or []
+        if len(deps) != len(rec.writes):
+            raise CommandReplayError(
+                f"command record ssn={rec.ssn} carries {len(deps)} deps for "
+                f"{len(rec.writes)} writes — footer does not mirror the "
+                f"write chain", reason=REASON_CMD_DEP,
+            )
+        for (key, param), (_dkey, dssn) in zip(rec.writes, deps):
+            lvl = chain.get(key, 0) + 1
+            chain[key] = lvl
+            depth = max(depth, lvl)
+            if _exec_command_write(
+                data, key, rec.ssn, rec.cmd_op, dssn, param, COMMANDS,
+                dep_lookup,
+            ):
+                applied += 1
+    return depth, applied
+
+
+def _command_dep_per_write(log: ColumnarLog) -> np.ndarray:
+    """Scatter a columnar log's command dep SSNs onto per-write lanes
+    (``-1`` for value-record lanes).  The encoder invariant — dep footers
+    mirror the write chain one-to-one — is validated here because replay is
+    the first consumer that needs the positional alignment."""
+    nw = log.n_writes.astype(np.int64)
+    cd = np.diff(log.cmd_dep_start)
+    if not np.array_equal(cd, nw[log.cmd_rec]):
+        raise CommandReplayError(
+            "command dep footers do not mirror their write chains",
+            reason=REASON_CMD_DEP,
+        )
+    dep = np.full(len(log.wr_rec), -1, np.int64)
+    total = int(cd.sum())
+    if total:
+        wr_off = np.zeros(log.n_records + 1, np.int64)
+        np.cumsum(nw, out=wr_off[1:])
+        cum = np.zeros(len(cd) + 1, np.int64)
+        np.cumsum(cd, out=cum[1:])
+        lane = (
+            np.repeat(wr_off[log.cmd_rec], cd)
+            + np.arange(total, dtype=np.int64)
+            - np.repeat(cum[:-1], cd)
+        )
+        dep[lane] = log.cmd_dep_ssn
+    return dep
+
+
+def _apply_commands_vectorized(
+    data: Dict[bytes, Tuple[bytes, int]],
+    keys: List[bytes],
+    ssn: np.ndarray,
+    op: np.ndarray,
+    dep: np.ndarray,
+    params: np.ndarray,
+    dep_lookup=None,
+) -> Tuple[int, int]:
+    """Dependency-level-batched command re-execution over flattened command
+    write lanes (the vectorized twin of :func:`_apply_command_records`).
+
+    Lanes lexsort by (key, SSN); each lane's *level* is its rank within its
+    key segment.  Level ``l`` lanes touch distinct keys, so they re-execute
+    as one batch; the loop over levels serializes only true per-key chains.
+    Returns ``(max chain depth, writes applied)``.
+    """
+    from .command import COMMANDS
+
+    n = len(keys)
+    kf = ColumnarLog.encode_keys_fixed(keys, [len(k) for k in keys])
+    order = np.lexsort((ssn, kf))
+    k_s = kf[order]
+    gb = np.empty(n, dtype=bool)
+    gb[0] = True
+    gb[1:] = k_s[1:] != k_s[:-1]
+    starts = np.flatnonzero(gb)
+    seg_len = np.diff(np.append(starts, n))
+    level = np.arange(n, dtype=np.int64) - np.repeat(starts, seg_len)
+    depth = int(seg_len.max())
+    ssn_l = ssn.tolist()
+    op_l = op.tolist()
+    dep_l = dep.tolist()
+    applied = 0
+    for lvl in range(depth):
+        for j in order[np.flatnonzero(level == lvl)].tolist():
+            if _exec_command_write(
+                data, keys[j], ssn_l[j], op_l[j], dep_l[j], params[j],
+                COMMANDS, dep_lookup,
+            ):
+                applied += 1
+    return depth, applied
 
 
 # --- vectorized replay (batched last-writer-wins) ----------------------------
@@ -333,6 +533,7 @@ def replay_columnar(
     base: Optional[Dict[bytes, Tuple[bytes, int]]] = None,
     use_kernel: bool = False,
     record_mask: Optional[Sequence[Optional[np.ndarray]]] = None,
+    dep_lookup=None,
 ) -> Tuple[Dict[bytes, Tuple[bytes, int]], int, int]:
     """Batched last-writer-wins replay over columnar device logs.
 
@@ -348,12 +549,42 @@ def replay_columnar(
     extension point sharded recovery uses to drop cross-shard records that
     are not durable on every participant (`repro.shard.recovery`).
 
+    Command-framed records (adaptive logging) are masked out of the value
+    reduction and re-executed afterwards in dependency-level batches against
+    the reduced image — see the command re-execution section above.
+    ``dep_lookup`` resolves a command pre-image that is in none of ``logs``
+    or ``base`` (``key -> (value, ssn) | None``) — the replica applier
+    passes its live table here, because chunks already applied in earlier
+    polls hold the pre-images of later command records.
+
     Returns ``(data, n_replayed, n_skipped_uncommitted)``.
     """
     base = base or {}
     n_replayed = 0
     n_skipped = 0
     n_base = len(base)
+
+    # command write lanes, deferred past the value reduction
+    cmd_keys: List[bytes] = []
+    cmd_parts: List[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]] = []
+
+    def _finish(
+        data: Dict[bytes, Tuple[bytes, int]]
+    ) -> Tuple[Dict[bytes, Tuple[bytes, int]], int, int]:
+        if cmd_keys:
+            depth, applied = _apply_commands_vectorized(
+                data,
+                cmd_keys,
+                np.concatenate([p[0] for p in cmd_parts]),
+                np.concatenate([p[1] for p in cmd_parts]),
+                np.concatenate([p[2] for p in cmd_parts]),
+                np.concatenate([p[3] for p in cmd_parts]),
+                dep_lookup,
+            )
+            if REGISTRY.enabled:
+                REGISTRY.gauge_max("adaptive.replay.cmd_depth", depth)
+                REGISTRY.count("adaptive.replay.commands", applied)
+        return data, n_replayed, n_skipped
 
     # surviving writes, columnar across sources: exact key identity (the
     # sentinel-terminated fixed-width encoding), SSN, value payload (object
@@ -380,6 +611,19 @@ def replay_columnar(
             continue
         vals = log.values_obj
         wmask = ok[log.wr_rec]
+        if log.n_command:
+            wcmd = log.cmd_mask[log.wr_rec]
+            sel = np.flatnonzero(wmask & wcmd)
+            if len(sel):
+                dep_w = _command_dep_per_write(log)
+                cmd_keys.extend(k[:-1] for k in log.keys_fixed[sel].tolist())
+                cmd_parts.append((
+                    log.wr_ssn[sel],
+                    log.cmd_op_col[log.wr_rec[sel]],
+                    dep_w[sel],
+                    vals[sel],       # the op param rides the value slot
+                ))
+            wmask = wmask & ~wcmd
         if wmask.all():
             key_mats.append(log.keys_fixed)
             ssn_parts.append(log.wr_ssn)
@@ -391,7 +635,7 @@ def replay_columnar(
 
     n_total = sum(len(p) for p in ssn_parts)
     if n_total == 0:
-        return {}, n_replayed, n_skipped
+        return _finish({})
 
     # common width, kept a multiple of 8 so the int64 word view is zero-copy
     width = -(-max(1, max(m.dtype.itemsize for m in key_mats)) // 8) * 8
@@ -424,7 +668,7 @@ def replay_columnar(
             win_keys, val_arr[winners].tolist(), ssn_arr[winners].tolist()
         ):
             data[k[:-1]] = (v, s)
-        return data, n_replayed, n_skipped
+        return _finish(data)
 
     # --- compiled path: dense key ids + SSN-guarded scatter-max apply --------
     # both dims bucket-padded (slots to S with empty-slot identities, lanes
@@ -459,7 +703,7 @@ def replay_columnar(
             continue
         idx = int(base_idx_of_slot[g]) if p < 0 else n_base + p
         data[win_keys[g][:-1]] = (val_arr[idx], s)
-    return data, n_replayed, n_skipped
+    return _finish(data)
 
 
 # --- compiled fused replay (tile decode -> hash-slot scan -> merge) -----------

@@ -41,6 +41,20 @@ this shard's copy would break recovery's durable-on-all-participants cut
 and discard the surviving participants' records of a *committed*
 transaction that only their logs still carry.  Candidate segments are
 decoded once (cold data, about to be deleted) to find their x-records.
+
+**Command-dep pin (adaptive logging).**  A retained ``FLAG_COMMAND``
+record re-executes at recovery against its observed pre-image SSN; if the
+pre-image is neither in the retained log nor covered by the checkpoint
+image, recovery refuses the record (``command-dep-unreplayable``).  Both
+truncators therefore refuse to drop any segment that may still hold the
+pre-image of a retained command record: the pass scans the segments it is
+*keeping* for command deps above the checkpoint RSN (deps at or below the
+RSN are image-covered) and pins the droppable prefix below the smallest
+such dep.  Under the adaptive policy's own framing rule this floor can
+never bite — a dep above the RSN lives above the safe point and is
+retained by the plain rule already — so it is a belt-and-suspenders
+invariant against foreign or hand-built logs and stale safe points, at the
+cost of decoding the retained suffix once per pass.
 """
 
 from __future__ import annotations
@@ -99,6 +113,49 @@ class FrontierRegistry:
         registered (no consumer cap)."""
         f = self.frontiers()
         return min(f.values()) if f else None
+
+
+def retained_command_dep_floor(
+    devices, safe: Optional[int], ckpt_rsn: int
+) -> Optional[int]:
+    """Smallest command-record dep SSN above ``ckpt_rsn`` among the records
+    a pass at ``safe`` would *retain* (sealed segments above the safe point
+    plus the unsealed tail), or None when no retained command depends on
+    log-covered state.  Dropping any segment that may hold a record at or
+    above this SSN could strand a retained command's pre-image — see the
+    command-dep pin in the module docstring."""
+    floor: Optional[int] = None
+    for dev in devices:
+        if not hasattr(dev, "read_segment_blobs"):
+            continue
+        segs = dev.segments() if hasattr(dev, "segments") else []
+        for i, blob in enumerate(dev.read_segment_blobs()):
+            # blobs beyond the sealed metadata (the tail, or a chain that
+            # grew mid-pass) are always retained — scan them
+            if i < len(segs) and safe is not None and segs[i][2] <= safe:
+                continue                     # droppable: goes with its deps
+            if not blob:
+                continue
+            log = decode_columnar(blob)
+            if log.cmd_dep_ssn is None or not len(log.cmd_dep_ssn):
+                continue
+            deps = log.cmd_dep_ssn[log.cmd_dep_ssn > ckpt_rsn]
+            if len(deps):
+                m = int(deps.min())
+                floor = m if floor is None else min(floor, m)
+    return floor
+
+
+def _keep_from_floor(dev, floor: Optional[int]) -> Optional[int]:
+    """First sealed-segment index of ``dev`` that may contain a record at
+    ``floor`` or above (per-device SSN monotonicity: a segment whose
+    ``last_ssn`` is below the floor cannot hold the dep)."""
+    if floor is None:
+        return None
+    for i, (_, _, last_ssn) in enumerate(dev.segments()):
+        if last_ssn >= floor:
+            return i
+    return None
 
 
 @dataclass
@@ -188,8 +245,13 @@ class LogTruncator:
         stats.epoch, stats.safe_ssn, ckpt_rsn = anchor
         safe = stats.safe_ssn
         self._seal_all(stats)
+        floor = retained_command_dep_floor(self.engine.devices, safe, ckpt_rsn)
+        if floor is not None and REGISTRY.enabled:
+            REGISTRY.count("truncate.cmd_dep_pins")
         for dev in self.engine.devices:
-            n, b = dev.truncate_to_ssn(safe)
+            n, b = dev.truncate_to_ssn(
+                safe, keep_from=_keep_from_floor(dev, floor)
+            )
             stats.segments_dropped += n
             stats.bytes_dropped += b
             stats.per_device.append({"segments": n, "bytes": b})
@@ -313,12 +375,21 @@ class ShardedLogTruncator:
             if safe[p] is not None:
                 meta = load_latest_checkpoint_meta(self.checkpoint_dirs[p])
                 stats.epoch = int(meta["epoch"]) if meta else None
+                rsn_p = int(meta["rsn"]) if meta else 0
                 for buf, dev in zip(sh.engine.buffers, sh.engine.devices):
                     with buf.flush_lock:
                         if dev.seal(buf.dsn) is not None:
                             stats.segments_sealed += 1
+                # command deps are shard-local (the policy value-frames
+                # cross-shard records), so the pin floor is per shard
+                floor = retained_command_dep_floor(
+                    sh.engine.devices, safe[p], rsn_p
+                )
                 for dev in sh.engine.devices:
                     keep_from = self._droppable_prefix(dev, safe, p)
+                    kf_cmd = _keep_from_floor(dev, floor)
+                    if kf_cmd is not None:
+                        keep_from = min(keep_from, kf_cmd)
                     n, b = dev.truncate_to_ssn(safe[p], keep_from=keep_from)
                     stats.segments_dropped += n
                     stats.bytes_dropped += b

@@ -25,9 +25,28 @@ sharded recovery can resolve a consistent cut: a cross-shard transaction is
 replayed iff a record with its gtid is durable on *all* participants (see
 ``repro.shard.recovery``).
 
+``flags`` bit 2: COMMAND — the record is *command-framed* (adaptive logging,
+ROADMAP item 2): the per-write value slot carries the op's *parameter*
+instead of the new tuple image, and the payload carries a command footer
+after the write chain::
+
+    cmd_footer := [u32 op_id][u32 n_deps]
+                  n_deps * ([u32 key_len][key bytes][u64 observed_ssn])
+
+``op_id`` names a deterministic operator in ``repro.core.command.COMMANDS``
+(``new_value = op(old_value, param)``); the dep entries record, for each
+written key, the SSN of the pre-image the transaction observed — the RAW
+edge recovery must satisfy before re-executing the command.  The engine's
+adaptive policy only emits command frames whose deps mirror the write chain
+one-to-one (``n_deps == n_writes``, same keys, same order).  COMMAND and
+XSHARD are mutually exclusive by policy (cross-shard records always carry
+values); a frame with both bits set is treated as malformed.
+
 The length+crc framing makes torn tail writes detectable: recovery truncates
 the log at the first bad frame, which is exactly the paper's "buffer hole"
-semantics at the device level.
+semantics at the device level.  Every decoder in this module walks frames
+through one shared parser (:func:`_parse_frame`), so torn/corrupt/malformed
+semantics cannot drift between the scalar, columnar, and streaming paths.
 """
 
 from __future__ import annotations
@@ -41,11 +60,14 @@ import numpy as np
 
 FLAG_HAS_READS = 0x01
 FLAG_XSHARD = 0x02
+FLAG_COMMAND = 0x04
 
 _HDR = struct.Struct("<II")           # length, crc32
 _PAYLOAD_FIXED = struct.Struct("<QQBI")  # ssn, tid, flags, n_writes
 _U32 = struct.Struct("<I")
+_U64 = struct.Struct("<Q")
 _XPART = struct.Struct("<IQ")         # shard_id, ssn (xdep footer entry)
+_CMD_FIXED = struct.Struct("<II")     # op_id, n_deps (command footer prefix)
 
 
 @dataclass
@@ -68,6 +90,13 @@ class Txn:
     # the SSN this transaction holds there; None for single-shard records
     xdep: Optional[List[Tuple[int, int]]] = None
 
+    # command framing (adaptive logging): when ``cmd_op`` is set the record
+    # is emitted as FLAG_COMMAND — write_set values are op *params*, and
+    # ``cmd_deps`` lists (key, observed pre-image ssn), mirroring write_set
+    # order.  Mutually exclusive with ``xdep``.
+    cmd_op: Optional[int] = None
+    cmd_deps: Optional[List[Tuple[Any, int]]] = None
+
     # lifecycle timestamps (perf accounting)
     t_start: float = 0.0
     t_precommit: float = 0.0  # SSN allocated + record buffered ("pre-committed")
@@ -88,6 +117,10 @@ class Txn:
         flags = FLAG_HAS_READS if self.has_reads else 0
         if self.xdep is not None:
             flags |= FLAG_XSHARD
+        if self.cmd_op is not None:
+            if self.xdep is not None:
+                raise ValueError("COMMAND and XSHARD are mutually exclusive")
+            flags |= FLAG_COMMAND
         parts = [
             _PAYLOAD_FIXED.pack(self.ssn, self.tid, flags, len(self.write_set))
         ]
@@ -97,6 +130,14 @@ class Txn:
             parts.append(kb)
             parts.append(_U32.pack(len(val)))
             parts.append(val)
+        if self.cmd_op is not None:
+            deps = self.cmd_deps or []
+            parts.append(_CMD_FIXED.pack(self.cmd_op, len(deps)))
+            for key, dssn in deps:
+                kb = key.encode() if isinstance(key, str) else bytes(key)
+                parts.append(_U32.pack(len(kb)))
+                parts.append(kb)
+                parts.append(_U64.pack(dssn))
         if self.xdep is not None:
             parts.append(_U32.pack(len(self.xdep)))
             for shard_id, ssn in self.xdep:
@@ -150,11 +191,26 @@ def encode_batch(txns: Sequence["Txn"]) -> Tuple[bytes, np.ndarray]:
     ssn_l: List[int] = []
     tid_l: List[int] = []
     flag_l: List[int] = []
+    op_l: List[int] = []
+    dep_l: List[int] = []
+    any_cmd = False
     for t in txns:
         nw_l.append(len(t.write_set))
         ssn_l.append(t.ssn)
         tid_l.append(t.tid)
-        flag_l.append(FLAG_HAS_READS if t.read_set else 0)
+        fl = FLAG_HAS_READS if t.read_set else 0
+        if t.cmd_op is not None:
+            fl |= FLAG_COMMAND
+            any_cmd = True
+            op_l.append(t.cmd_op)
+            deps = t.cmd_deps or []
+            if len(deps) != len(t.write_set):
+                raise ValueError("cmd_deps must mirror write_set")
+            dep_l.extend(d for _, d in deps)
+        else:
+            op_l.append(0)
+            dep_l.extend(0 for _ in t.write_set)
+        flag_l.append(fl)
         for key, val in t.write_set:
             kbs.append(key.encode() if isinstance(key, str) else bytes(key))
             vals.append(val)
@@ -165,6 +221,8 @@ def encode_batch(txns: Sequence["Txn"]) -> Tuple[bytes, np.ndarray]:
         np.asarray(nw_l, dtype=np.int64),
         kbs,
         vals,
+        cmd_op=np.asarray(op_l, dtype=np.int64) if any_cmd else None,
+        cmd_dep_ssn=np.asarray(dep_l, dtype=np.int64) if any_cmd else None,
     )
 
 
@@ -177,11 +235,19 @@ def encode_batch_columns(
     vals: Sequence[bytes],           # flattened value bytes, record-major
     klen: Optional[np.ndarray] = None,
     vlen: Optional[np.ndarray] = None,
+    cmd_op: Optional[np.ndarray] = None,
+    cmd_dep_ssn: Optional[np.ndarray] = None,
 ) -> Tuple[bytes, np.ndarray]:
     """Columnar core of :func:`encode_batch`: frame a batch straight from
     arrays — the fully array-native entry used by the indexed batch pipeline
     (`repro.db.batch.BatchOCC.execute_indexed`), where keys/lengths come
-    from the table's columns instead of per-``Txn`` objects."""
+    from the table's columns instead of per-``Txn`` objects.
+
+    Mixed command/value batches: records whose ``flags`` carry
+    ``FLAG_COMMAND`` gain the command footer.  ``cmd_op`` is the per-record
+    op id and ``cmd_dep_ssn`` the per-*write* observed pre-image SSN (both
+    only read where the owning record is command-framed); dep keys mirror
+    the write chain, the policy invariant the footer format encodes."""
     n = len(ssn)
     if n == 0:
         return b"", np.empty(0, dtype=np.int64)
@@ -196,7 +262,18 @@ def encode_batch_columns(
     np.cumsum(nw, out=wstart[1:])
     wcs = np.zeros(len(kbs) + 1, dtype=np.int64)
     np.cumsum(wlen, out=wcs[1:])
-    plen = _PAYLOAD_FIXED.size + wcs[wstart[1:]] - wcs[wstart[:-1]]
+    chain = wcs[wstart[1:]] - wcs[wstart[:-1]]   # write-chain bytes per record
+    is_cmd = (np.asarray(flags, dtype=np.uint8) & FLAG_COMMAND) != 0
+    if is_cmd.any():
+        if cmd_op is None or cmd_dep_ssn is None:
+            raise ValueError("FLAG_COMMAND records need cmd_op/cmd_dep_ssn")
+        kcs = np.zeros(len(kbs) + 1, dtype=np.int64)
+        np.cumsum(klen, out=kcs[1:])
+        rec_kbytes = kcs[wstart[1:]] - kcs[wstart[:-1]]
+        foot = np.where(is_cmd, _CMD_FIXED.size + 12 * nw + rec_kbytes, 0)
+    else:
+        foot = 0
+    plen = _PAYLOAD_FIXED.size + chain + foot
     lengths = _HDR.size + plen
     rec_off = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(lengths, out=rec_off[1:])
@@ -228,6 +305,39 @@ def encode_batch_columns(
         for o, ln, vb in zip((voff + 4).tolist(), vlen.tolist(), vals):
             mv[o : o + ln] = vb
 
+    if is_cmd.any():
+        # command footers: [u32 op][u32 n_deps] then one keyed dep per write
+        cidx = np.flatnonzero(is_cmd)
+        foot_off = rec_off[:-1] + frame + chain
+        out[_scatter_ranges(foot_off[cidx], 4)] = (
+            np.asarray(cmd_op, dtype=np.int64)[cidx]
+            .astype("<u4").view(np.uint8).reshape(-1, 4).ravel()
+        )
+        out[_scatter_ranges(foot_off[cidx] + 4, 4)] = (
+            nw[cidx].astype("<u4").view(np.uint8).reshape(-1, 4).ravel()
+        )
+        wmask = np.repeat(is_cmd, nw)
+        if wmask.any():
+            dlen = 12 + klen                     # framed bytes per dep entry
+            dcs = np.zeros(len(kbs) + 1, dtype=np.int64)
+            np.cumsum(dlen, out=dcs[1:])
+            intra_dep = dcs[:-1] - np.repeat(dcs[wstart[:-1]], nw)
+            dep_off = np.repeat(foot_off + _CMD_FIXED.size, nw) + intra_dep
+            sel = np.flatnonzero(wmask)
+            out[_scatter_ranges(dep_off[sel], 4)] = (
+                klen[sel].astype("<u4").view(np.uint8).reshape(-1, 4).ravel()
+            )
+            mv = memoryview(out)
+            offs = (dep_off + 4).tolist()
+            lns = klen.tolist()
+            for j in sel.tolist():
+                mv[offs[j] : offs[j] + lns[j]] = kbs[j]
+            ssn_off = dep_off + 4 + klen
+            out[_scatter_ranges(ssn_off[sel], 8)] = (
+                np.asarray(cmd_dep_ssn, dtype=np.int64)[sel]
+                .astype("<u8").view(np.uint8).reshape(-1, 8).ravel()
+            )
+
     # per-record CRC over the payload bytes, patched into the header column
     mv = memoryview(out)
     crc32 = zlib.crc32
@@ -256,10 +366,111 @@ class LogRecord:
     # cross-shard dependency edge: [(shard_id, ssn), ...] over every
     # participant; None for single-shard records.  The gtid is ``tid``.
     xdep: Optional[List[Tuple[int, int]]] = None
+    # command framing: op id + [(dep key, observed pre-image ssn), ...];
+    # both None for value records.  When set, ``writes`` carries params.
+    cmd_op: Optional[int] = None
+    cmd_deps: Optional[List[Tuple[bytes, int]]] = None
 
     @property
     def write_only(self) -> bool:
         return not self.has_reads
+
+    @property
+    def is_command(self) -> bool:
+        return self.cmd_op is not None
+
+
+class Frame:
+    """One fully parsed, validated log frame — the unit every decoder in
+    this module consumes (see :func:`_parse_frame`)."""
+
+    __slots__ = ("ssn", "tid", "flags", "n_writes", "keys", "vals", "klens",
+                 "xdep", "cmd_op", "cmd_deps", "end")
+
+    def __init__(self, ssn, tid, flags, n_writes, keys, vals, klens,
+                 xdep, cmd_op, cmd_deps, end):
+        self.ssn = ssn
+        self.tid = tid
+        self.flags = flags
+        self.n_writes = n_writes
+        self.keys = keys
+        self.vals = vals
+        self.klens = klens
+        self.xdep = xdep
+        self.cmd_op = cmd_op
+        self.cmd_deps = cmd_deps
+        self.end = end
+
+
+def _parse_frame(buf: bytes, off: int, n: int) -> Optional[Frame]:
+    """Parse and validate the frame starting at ``off``; ``None`` if it is
+    torn (runs past ``n``), crc-corrupt, or malformed (write chain or footer
+    out of bounds, COMMAND+XSHARD).  This is the *single* frame walk shared
+    by :func:`decode_records` and :func:`decode_columnar_stream`, so the
+    stop-at-first-bad-frame semantics are identical by construction."""
+    if off + _HDR.size > n:
+        return None
+    length, crc = _HDR.unpack_from(buf, off)
+    start = off + _HDR.size
+    end = start + length
+    if end > n:
+        return None  # torn tail write
+    payload = buf[start:end]
+    if zlib.crc32(payload) != crc:
+        return None  # corrupt frame: stop (holes never precede valid frames
+        # on a device because segments flush sequentially)
+    ssn, tid, flags, n_writes = _PAYLOAD_FIXED.unpack_from(payload, 0)
+    pos = _PAYLOAD_FIXED.size
+    keys: List[bytes] = []
+    vals: List[bytes] = []
+    klens: List[int] = []
+    for _ in range(n_writes):
+        if pos + 4 > length:
+            return None
+        (klen,) = _U32.unpack_from(payload, pos)
+        pos += 4
+        if pos + klen + 4 > length:
+            return None
+        key = payload[pos : pos + klen]
+        pos += klen
+        (vlen,) = _U32.unpack_from(payload, pos)
+        pos += 4
+        if pos + vlen > length:
+            return None
+        val = payload[pos : pos + vlen]
+        pos += vlen
+        keys.append(key)
+        vals.append(val)
+        klens.append(klen)
+    cmd_op: Optional[int] = None
+    cmd_deps: Optional[List[Tuple[bytes, int]]] = None
+    if flags & FLAG_COMMAND:
+        if flags & FLAG_XSHARD:
+            return None  # the classes are exclusive; both bits == malformed
+        if pos + _CMD_FIXED.size > length:
+            return None
+        cmd_op, n_deps = _CMD_FIXED.unpack_from(payload, pos)
+        pos += _CMD_FIXED.size
+        cmd_deps = []
+        for _ in range(n_deps):
+            if pos + 4 > length:
+                return None
+            (dklen,) = _U32.unpack_from(payload, pos)
+            pos += 4
+            if pos + dklen + 8 > length:
+                return None
+            dkey = payload[pos : pos + dklen]
+            pos += dklen
+            (dssn,) = _U64.unpack_from(payload, pos)
+            pos += 8
+            cmd_deps.append((dkey, dssn))
+    xdep: Optional[List[Tuple[int, int]]] = None
+    if flags & FLAG_XSHARD:
+        xdep, pos = _decode_xdep(payload, pos, length)
+        if xdep is None:
+            return None
+    return Frame(ssn, tid, flags, n_writes, keys, vals, klens,
+                 xdep, cmd_op, cmd_deps, end)
 
 
 def decode_records(buf: bytes) -> List[LogRecord]:
@@ -268,52 +479,22 @@ def decode_records(buf: bytes) -> List[LogRecord]:
     out: List[LogRecord] = []
     off = 0
     n = len(buf)
-    while off + _HDR.size <= n:
-        length, crc = _HDR.unpack_from(buf, off)
-        start = off + _HDR.size
-        end = start + length
-        if end > n:
-            break  # torn tail write
-        payload = buf[start:end]
-        if zlib.crc32(payload) != crc:
-            break  # corrupt frame: stop (holes never precede valid frames on
-            # a device because segments flush sequentially)
-        ssn, tid, flags, n_writes = _PAYLOAD_FIXED.unpack_from(payload, 0)
-        pos = _PAYLOAD_FIXED.size
-        writes: List[Tuple[bytes, bytes]] = []
-        ok = True
-        for _ in range(n_writes):
-            if pos + 4 > length:
-                ok = False
-                break
-            (klen,) = _U32.unpack_from(payload, pos)
-            pos += 4
-            key = payload[pos : pos + klen]
-            pos += klen
-            if pos + 4 > length:
-                ok = False
-                break
-            (vlen,) = _U32.unpack_from(payload, pos)
-            pos += 4
-            val = payload[pos : pos + vlen]
-            pos += vlen
-            writes.append((key, val))
-        xdep: Optional[List[Tuple[int, int]]] = None
-        if ok and flags & FLAG_XSHARD:
-            xdep, pos = _decode_xdep(payload, pos, length)
-            ok = xdep is not None
-        if not ok:
+    while True:
+        fr = _parse_frame(buf, off, n)
+        if fr is None:
             break
         out.append(
             LogRecord(
-                ssn=ssn,
-                tid=tid,
-                has_reads=bool(flags & FLAG_HAS_READS),
-                writes=writes,
-                xdep=xdep,
+                ssn=fr.ssn,
+                tid=fr.tid,
+                has_reads=bool(fr.flags & FLAG_HAS_READS),
+                writes=list(zip(fr.keys, fr.vals)),
+                xdep=fr.xdep,
+                cmd_op=fr.cmd_op,
+                cmd_deps=fr.cmd_deps,
             )
         )
-        off = end
+        off = fr.end
     return out
 
 
@@ -389,10 +570,42 @@ class ColumnarLog:
     xp_start: Optional[np.ndarray] = None
     xp_shard: Optional[np.ndarray] = None
     xp_ssn: Optional[np.ndarray] = None
+    # command columns (``None`` when the log carries no COMMAND records).
+    # ``cmd_rec[i]`` is the owning record index of the i-th command record,
+    # ``cmd_op[i]`` its registry op id, ``cmd_dep_start`` the
+    # ``(len(cmd_rec)+1,)`` prefix delimiting its dep slice of
+    # ``cmd_dep_key``/``cmd_dep_ssn`` (dep keys mirror the record's write
+    # chain; the SSN is the observed pre-image version).  For command
+    # records the ``values`` entries are op *params*, not tuple images.
+    cmd_rec: Optional[np.ndarray] = None
+    cmd_op: Optional[np.ndarray] = None
+    cmd_dep_start: Optional[np.ndarray] = None
+    cmd_dep_key: Optional[List[bytes]] = None
+    cmd_dep_ssn: Optional[np.ndarray] = None
 
     @property
     def n_records(self) -> int:
         return len(self.ssn)
+
+    @property
+    def n_command(self) -> int:
+        return 0 if self.cmd_rec is None else len(self.cmd_rec)
+
+    @property
+    def cmd_mask(self) -> np.ndarray:
+        """Per-record bool: is record i command-framed?"""
+        m = np.zeros(self.n_records, dtype=bool)
+        if self.cmd_rec is not None:
+            m[self.cmd_rec] = True
+        return m
+
+    @property
+    def cmd_op_col(self) -> np.ndarray:
+        """Per-record op id (-1 for value records)."""
+        col = np.full(self.n_records, -1, dtype=np.int64)
+        if self.cmd_rec is not None:
+            col[self.cmd_rec] = self.cmd_op
+        return col
 
     @staticmethod
     def encode_keys_fixed(keys: Sequence[bytes], klens: Sequence[int]) -> np.ndarray:
@@ -456,6 +669,12 @@ class ColumnarLog:
         xp_ssn: List[np.ndarray] = []
         xp_start_parts: List[np.ndarray] = []
         xp_off = 0
+        c_rec: List[np.ndarray] = []
+        c_op: List[np.ndarray] = []
+        c_dep_key: List[bytes] = []
+        c_dep_ssn: List[np.ndarray] = []
+        c_start_parts: List[np.ndarray] = []
+        c_off = 0
         for i, p in enumerate(parts):
             keys.extend(p.keys)
             values.extend(p.values)
@@ -466,7 +685,15 @@ class ColumnarLog:
                 xp_ssn.append(p.xp_ssn)
                 xp_start_parts.append(p.xp_start[1:] + xp_off)
                 xp_off += int(p.xp_start[-1])
+            if p.cmd_rec is not None:
+                c_rec.append(p.cmd_rec + rec_off[i])
+                c_op.append(p.cmd_op)
+                c_dep_key.extend(p.cmd_dep_key)
+                c_dep_ssn.append(p.cmd_dep_ssn)
+                c_start_parts.append(p.cmd_dep_start[1:] + c_off)
+                c_off += int(p.cmd_dep_start[-1])
         has_x = bool(x_rec)
+        has_c = bool(c_rec)
         return ColumnarLog(
             ssn=np.concatenate([p.ssn for p in parts]),
             tid=np.concatenate([p.tid for p in parts]),
@@ -484,6 +711,13 @@ class ColumnarLog:
             if has_x else None,
             xp_shard=np.concatenate(xp_shard) if has_x else None,
             xp_ssn=np.concatenate(xp_ssn) if has_x else None,
+            cmd_rec=np.concatenate(c_rec) if has_c else None,
+            cmd_op=np.concatenate(c_op) if has_c else None,
+            cmd_dep_start=np.concatenate(
+                [np.zeros(1, np.int64)] + c_start_parts
+            ) if has_c else None,
+            cmd_dep_key=c_dep_key if has_c else None,
+            cmd_dep_ssn=np.concatenate(c_dep_ssn) if has_c else None,
         )
 
     def to_records(self) -> List[LogRecord]:
@@ -495,10 +729,20 @@ class ColumnarLog:
                 xdeps[rec] = list(
                     zip(self.xp_shard[lo:hi].tolist(), self.xp_ssn[lo:hi].tolist())
                 )
+        cmds: Dict[int, Tuple[int, List[Tuple[bytes, int]]]] = {}
+        if self.cmd_rec is not None:
+            for i, rec in enumerate(self.cmd_rec.tolist()):
+                lo, hi = int(self.cmd_dep_start[i]), int(self.cmd_dep_start[i + 1])
+                cmds[rec] = (
+                    int(self.cmd_op[i]),
+                    list(zip(self.cmd_dep_key[lo:hi],
+                             self.cmd_dep_ssn[lo:hi].tolist())),
+                )
         out: List[LogRecord] = []
         w = 0
         for i in range(self.n_records):
             nw = int(self.n_writes[i])
+            op, deps = cmds.get(i, (None, None))
             out.append(
                 LogRecord(
                     ssn=int(self.ssn[i]),
@@ -506,6 +750,8 @@ class ColumnarLog:
                     has_reads=bool(self.has_reads[i]),
                     writes=list(zip(self.keys[w : w + nw], self.values[w : w + nw])),
                     xdep=xdeps.get(i),
+                    cmd_op=op,
+                    cmd_deps=deps,
                 )
             )
             w += nw
@@ -549,77 +795,57 @@ def decode_columnar_stream(buf: bytes) -> Tuple[ColumnarLog, int]:
     xp_shard: List[int] = []
     xp_ssn: List[int] = []
     xp_start: List[int] = [0]
+    cmd_rec: List[int] = []
+    cmd_op: List[int] = []
+    cmd_dep_key: List[bytes] = []
+    cmd_dep_ssn: List[int] = []
+    cmd_dep_start: List[int] = [0]
 
     off = 0
     n = len(buf)
     rec_i = 0
-    while off + _HDR.size <= n:
-        length, crc = _HDR.unpack_from(buf, off)
-        start = off + _HDR.size
-        end = start + length
-        if end > n:
-            break  # torn tail write
-        payload = buf[start:end]
-        if zlib.crc32(payload) != crc:
-            break
-        ssn, tid, flags, n_writes = _PAYLOAD_FIXED.unpack_from(payload, 0)
-        pos = _PAYLOAD_FIXED.size
-        ok = True
-        wrote = 0
-        for _ in range(n_writes):
-            if pos + 4 > length:
-                ok = False
-                break
-            (klen,) = _U32.unpack_from(payload, pos)
-            pos += 4
-            key = payload[pos : pos + klen]
-            pos += klen
-            if pos + 4 > length:
-                ok = False
-                break
-            (vlen,) = _U32.unpack_from(payload, pos)
-            pos += 4
-            val = payload[pos : pos + vlen]
-            pos += vlen
-            keys.append(key)
-            values.append(val)
-            wr_rec.append(rec_i)
-            klens.append(klen)
-            wrote += 1
-        if ok and flags & FLAG_XSHARD:
-            parts, pos = _decode_xdep(payload, pos, length)
-            if parts is None:
-                ok = False
-            else:
-                x_rec.append(rec_i)
-                for shard_id, pssn in parts:
-                    xp_shard.append(shard_id)
-                    xp_ssn.append(pssn)
-                xp_start.append(len(xp_shard))
-        if not ok:
-            # drop the partial record's writes and stop at the bad frame
-            del keys[len(keys) - wrote :]
-            del values[len(values) - wrote :]
-            del wr_rec[len(wr_rec) - wrote :]
-            del klens[len(klens) - wrote :]
-            break
-        ssns.append(ssn)
-        tids.append(tid)
-        flags_l.append(bool(flags & FLAG_HAS_READS))
-        nw_l.append(n_writes)
+    while True:
+        fr = _parse_frame(buf, off, n)
+        if fr is None:
+            break  # torn, corrupt, or malformed: stop at the frame boundary
+        keys.extend(fr.keys)
+        values.extend(fr.vals)
+        klens.extend(fr.klens)
+        wr_rec.extend([rec_i] * fr.n_writes)
+        if fr.xdep is not None:
+            x_rec.append(rec_i)
+            for shard_id, pssn in fr.xdep:
+                xp_shard.append(shard_id)
+                xp_ssn.append(pssn)
+            xp_start.append(len(xp_shard))
+        if fr.cmd_op is not None:
+            cmd_rec.append(rec_i)
+            cmd_op.append(fr.cmd_op)
+            for dkey, dssn in fr.cmd_deps:
+                cmd_dep_key.append(dkey)
+                cmd_dep_ssn.append(dssn)
+            cmd_dep_start.append(len(cmd_dep_key))
+        ssns.append(fr.ssn)
+        tids.append(fr.tid)
+        flags_l.append(bool(fr.flags & FLAG_HAS_READS))
+        nw_l.append(fr.n_writes)
         rec_i += 1
-        off = end
+        off = fr.end
 
     return _columnar_from_lists(
         ssns, tids, flags_l, nw_l, wr_rec, klens, keys, values,
         x_rec, xp_start, xp_shard, xp_ssn,
+        cmd_rec, cmd_op, cmd_dep_start, cmd_dep_key, cmd_dep_ssn,
     ), off
 
 
 def _columnar_from_lists(
     ssns, tids, flags_l, nw_l, wr_rec, klens, keys, values,
     x_rec, xp_start, xp_shard, xp_ssn,
+    cmd_rec=None, cmd_op=None, cmd_dep_start=None,
+    cmd_dep_key=None, cmd_dep_ssn=None,
 ) -> ColumnarLog:
+    has_cmd = bool(cmd_rec)
     return ColumnarLog(
         ssn=np.asarray(ssns, dtype=np.int64),
         tid=np.asarray(tids, dtype=np.int64),
@@ -634,6 +860,13 @@ def _columnar_from_lists(
         xp_start=np.asarray(xp_start, dtype=np.int64) if x_rec else None,
         xp_shard=np.asarray(xp_shard, dtype=np.int64) if x_rec else None,
         xp_ssn=np.asarray(xp_ssn, dtype=np.int64) if x_rec else None,
+        cmd_rec=np.asarray(cmd_rec, dtype=np.int64) if has_cmd else None,
+        cmd_op=np.asarray(cmd_op, dtype=np.int64) if has_cmd else None,
+        cmd_dep_start=np.asarray(cmd_dep_start, dtype=np.int64)
+        if has_cmd else None,
+        cmd_dep_key=list(cmd_dep_key) if has_cmd else None,
+        cmd_dep_ssn=np.asarray(cmd_dep_ssn, dtype=np.int64)
+        if has_cmd else None,
     )
 
 

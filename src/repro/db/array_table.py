@@ -151,12 +151,21 @@ class ArrayTable:
         (value, ssn) pair — this is the replica applier's fold primitive."""
         with self.mutex:
             rows = np.empty(len(keys), dtype=np.int64)
+            fresh = np.zeros(len(keys), dtype=bool)
             index = self._index
             for i, kb in enumerate(keys):
                 k = kb.decode("utf-8", "surrogateescape")
                 row = index.get(k)
-                rows[i] = self._insert_locked(k, kb) if row is None else row
-            upd = ssns > self.ssn[rows]
+                if row is None:
+                    rows[i] = self._insert_locked(k, kb)
+                    fresh[i] = True
+                else:
+                    rows[i] = row
+            # a freshly-inserted row always takes the write: its placeholder
+            # (b"", ssn 0) would otherwise win the strict guard against an
+            # ssn-0 upsert — exactly the shape of a full-image checkpoint
+            # row for a key loaded before any logged write touched it
+            upd = fresh | (ssns > self.ssn[rows])
             if upd.any():
                 self.ssn[rows[upd]] = ssns[upd]
                 self.values[rows[upd]] = vals[upd]

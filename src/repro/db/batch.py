@@ -89,11 +89,23 @@ class TxnSpec:
     workloads like TPC-C); if given, the validator aborts the transaction
     when any of them is stale.  Without it, reads are observed fresh at each
     round start.
+
+    ``cmd_op``/``cmd_params`` (optional, params aligned with ``writes``)
+    declare the *command form* of the transaction: a registered op id
+    (:mod:`repro.core.command`) and the per-write parameter such that
+    ``op(pre_image, param) == write value``.  They are advisory — the
+    executor's :class:`~repro.core.engine.AdaptivePolicy` decides per record
+    whether to log the command form or the value form; without a policy (or
+    when ineligible: unregistered op, blind writes, cross-shard) the spec
+    logs values exactly as before.  The params-match-values contract is the
+    workload's to keep; the crash-equivalence suite pins it.
     """
 
     reads: Sequence[str] = ()
     writes: Sequence[Tuple[str, bytes]] = ()
     observed: Optional[Sequence[int]] = None
+    cmd_op: Optional[int] = None
+    cmd_params: Optional[Sequence[bytes]] = None
 
 
 @dataclass
@@ -139,7 +151,9 @@ class _Flat:
     specs: Optional[Sequence[TxnSpec]]
 
     @classmethod
-    def from_specs(cls, table: ArrayTable, specs: Sequence[TxnSpec]) -> "_Flat":
+    def from_specs(
+        cls, table: ArrayTable, specs: Sequence[TxnSpec], policy=None
+    ) -> "_Flat":
         self = cls.__new__(cls)
         self.specs = specs
         b = len(specs)
@@ -149,6 +163,13 @@ class _Flat:
         self.rd_len = np.empty(b, dtype=np.int64)
         self.wr_len = np.empty(b, dtype=np.int64)
         self.rec_len = np.empty(b, dtype=np.int64)
+        # adaptive framing (decided here because the reservation lengths
+        # depend on it — the drift guard in _run pins encode to these):
+        # per-spec command flag, op id, (key, dep ssn) list, logged write set
+        self.is_cmd = np.zeros(b, dtype=bool)
+        self.cmd_op_arr = np.zeros(b, dtype=np.int64)
+        self.cmd_deps: List[Optional[List[Tuple[str, int]]]] = [None] * b
+        self.cmd_writes: List[Optional[List[Tuple[str, bytes]]]] = [None] * b
         for i, s in enumerate(specs):
             nr, nw = len(s.reads), len(s.writes)
             assert nr + nw > 0, f"spec {i} has no reads and no writes"
@@ -160,14 +181,46 @@ class _Flat:
             self.rd_len[i] = nr
             self.wr_len[i] = nw
             all_keys.extend(s.reads)
-            rec = _REC_FIXED
-            for k, v in s.writes:
-                all_keys.append(k)
-                wr_vals.append(v)
-                # keys are str; ascii length == encoded length (fast path)
-                rec += _PER_WRITE + len(v) + (
-                    len(k) if k.isascii() else len(k.encode())
+            as_cmd = False
+            if policy is not None and s.cmd_op is not None:
+                # dep = observed pre-image SSN per written key; eligible only
+                # when every write has one (the spec read what it overwrites)
+                obs_map = (
+                    dict(zip(s.reads, s.observed))
+                    if s.observed is not None else {}
                 )
+                deps = [int(obs_map.get(k, -1)) for k, _ in s.writes]
+                params = s.cmd_params
+                as_cmd = (
+                    params is not None
+                    and len(params) == nw
+                    and policy.eligible(s.cmd_op, deps)
+                )
+            rec = _REC_FIXED
+            if as_cmd:
+                self.is_cmd[i] = True
+                self.cmd_op_arr[i] = s.cmd_op
+                self.cmd_deps[i] = [
+                    (k, int(d)) for (k, _), d in zip(s.writes, deps)
+                ]
+                self.cmd_writes[i] = [
+                    (k, p) for (k, _), p in zip(s.writes, params)
+                ]
+                rec += 8  # command footer prefix (u32 op + u32 n_deps)
+                for (k, v), p in zip(s.writes, params):
+                    all_keys.append(k)
+                    wr_vals.append(v)
+                    klen = len(k) if k.isascii() else len(k.encode())
+                    # write chain carries the param; dep entry repeats the key
+                    rec += _PER_WRITE + len(p) + klen + 12 + klen
+            else:
+                for k, v in s.writes:
+                    all_keys.append(k)
+                    wr_vals.append(v)
+                    # keys are str; ascii length == encoded length (fast path)
+                    rec += _PER_WRITE + len(v) + (
+                        len(k) if k.isascii() else len(k.encode())
+                    )
             self.rec_len[i] = rec
 
         self.acc_len = self.rd_len + self.wr_len
@@ -210,6 +263,11 @@ class _Flat:
         self = cls.__new__(cls)
         self.specs = None
         b = len(rd_start) - 1
+        # indexed batches are value-only (no specs to carry an op form)
+        self.is_cmd = np.zeros(b, dtype=bool)
+        self.cmd_op_arr = np.zeros(b, dtype=np.int64)
+        self.cmd_deps = [None] * b
+        self.cmd_writes = [None] * b
         rd_row = np.asarray(rd_row, dtype=np.int64)
         wr_row = np.asarray(wr_row, dtype=np.int64)
         self.rd_len = np.diff(np.asarray(rd_start, dtype=np.int64))
@@ -265,6 +323,7 @@ class BatchOCC:
         mode: str = "vectorized",
         tid_stride: int = TID_STRIDE,
         worker_id_base: int = 0,
+        policy=None,
     ):
         if mode not in ("vectorized", "pallas"):
             raise ValueError(f"unknown batch OCC mode {mode!r}")
@@ -272,6 +331,9 @@ class BatchOCC:
         self.engine = engine
         self.n_workers = n_workers
         self.mode = mode
+        # adaptive command/value framing policy (core.engine.AdaptivePolicy);
+        # None keeps the executor pure-value, byte-compatible with old logs
+        self.policy = policy
         # worker_id_base offsets this executor's worker ids and tid stripes
         # into a disjoint slice of the global spaces — the injection point
         # that lets several executors (one per shard, `repro.shard`) share
@@ -439,8 +501,8 @@ class BatchOCC:
         if len(specs) == 0:
             return BatchResult()
         t_ent = time.perf_counter() if TRACER.enabled else None
-        return self._run(_Flat.from_specs(self.table, specs), worker_ids,
-                         max_rounds, t_enter=t_ent)
+        return self._run(_Flat.from_specs(self.table, specs, self.policy),
+                         worker_ids, max_rounds, t_enter=t_ent)
 
     def execute_indexed(
         self,
@@ -562,7 +624,17 @@ class BatchOCC:
                         if spec.reads:
                             robs = ssn_now[starts[j] : starts[j] + len(spec.reads)]
                             t.read_set = list(zip(spec.reads, robs.tolist()))
-                        t.write_set = list(spec.writes)
+                        if flat.is_cmd[i]:
+                            # command framing: the logged write chain carries
+                            # the op params; the dep ssns were validated this
+                            # round so they ARE the live pre-image versions
+                            t.cmd_op = int(flat.cmd_op_arr[i])
+                            t.cmd_deps = flat.cmd_deps[i]
+                            t.write_set = flat.cmd_writes[i]
+                        else:
+                            t.write_set = list(spec.writes)
+                            if REGISTRY.enabled and spec.cmd_op is not None:
+                                REGISTRY.count("adaptive.policy.forced_value")
                         txns.append(t)
                 else:
                     # indexed mode: bookkeeping-only Txns (read_set is a
@@ -651,6 +723,16 @@ class BatchOCC:
                     assert np.array_equal(lens, flat.rec_len[win[sel]]), (
                         "framed length drift between _Flat and encode"
                     )
+                    if REGISTRY.enabled:
+                        cm = flat.is_cmd[win[sel]]
+                        n_cmd = int(cm.sum())
+                        cb = int(lens[cm].sum())
+                        REGISTRY.count("adaptive.log_bytes_command", cb)
+                        REGISTRY.count("adaptive.log_bytes_value",
+                                       int(lens.sum()) - cb)
+                        REGISTRY.count("adaptive.policy.command", n_cmd)
+                        REGISTRY.count("adaptive.policy.value",
+                                       len(group) - n_cmd)
                     if _trace:
                         TRACER.record(
                             ST_ENCODE, shard=self.trace_shard,

@@ -186,6 +186,61 @@ class RMWSpecFactory:
         return build
 
 
+class AdaptiveRMW:
+    """Batched read-modify-write specs carrying command framing fields
+    (adaptive logging, `repro.core.engine.AdaptivePolicy`).
+
+    Two shapes, selected by ``op``:
+
+    * ``"patch"`` — YCSB-style field update: read one wide tuple, overwrite
+      the leading column, keep the tail.  Ships ``(OP_PATCH_PREFIX, new
+      head)`` — ``COL_BYTES`` of param against ``N_COLS * COL_BYTES`` of
+      tuple, the paper-motivating command-framing win;
+    * ``"add_f64"`` — TPC-C-payment-style balance delta: the tuple is a
+      little-endian float64 plus an opaque tail, the param the 8-byte delta
+      (``OP_ADD_F64``).
+
+    Each spec's write value is the exact post-image the registered op
+    re-derives from ``(pre-image, param)`` — the executor applies the value,
+    replay re-executes the command, and crash equivalence holds either way.
+    Keys are drawn *without replacement per batch* so specs built against
+    the same table snapshot never invalidate each other mid-batch.
+    """
+
+    def __init__(self, table, n_records: int, seed: int = 0,
+                 op: str = "patch"):
+        if op not in ("patch", "add_f64"):
+            raise ValueError(f"unknown AdaptiveRMW op {op!r}")
+        from ..core.command import OP_ADD_F64, OP_PATCH_PREFIX
+        self.table = table
+        self.n_records = n_records
+        self.op = op
+        self.op_id = OP_PATCH_PREFIX if op == "patch" else OP_ADD_F64
+        self._rng = np.random.default_rng(seed)
+
+    def next_batch(self, n: int) -> List[TxnSpec]:
+        import struct as _struct
+        n = min(n, self.n_records)
+        idx = self._rng.choice(self.n_records, size=n, replace=False)
+        specs: List[TxnSpec] = []
+        for i in idx.tolist():
+            key = key_of(i)
+            value, ssn = self.table.get(key)
+            if self.op == "patch":
+                param = bytes(b ^ 0xFF for b in value[:COL_BYTES])
+                new = param + value[COL_BYTES:]
+            else:
+                delta = float(self._rng.integers(1, 500)) / 100.0
+                param = _struct.pack("<d", delta)
+                old = _struct.unpack_from("<d", value)[0] if len(value) >= 8 else 0.0
+                new = _struct.pack("<d", old + delta) + value[8:]
+            specs.append(TxnSpec(
+                reads=[key], writes=[(key, new)], observed=[ssn],
+                cmd_op=self.op_id, cmd_params=[param],
+            ))
+        return specs
+
+
 class YCSBHybrid:
     """Hybrid workload: one single-column write + a fixed-length scan."""
 

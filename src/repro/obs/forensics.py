@@ -17,7 +17,14 @@ decided it**:
   every missing/failing copy sits at or below its shard's checkpoint RSN or
   truncation floor: the checkpoint image already carries its effects;
 * ``torn-tail``                         — a partially flushed frame past the
-  last decodable record (gtid recovered best-effort from the torn bytes).
+  last decodable record (gtid recovered best-effort from the torn bytes);
+* ``command-dep-unreplayable``          — a command-framed record (adaptive
+  logging) whose observed pre-image SSN is neither in the retained log nor
+  covered by the checkpoint image: ``recover()`` refuses to re-execute it
+  (``CommandReplayError``) rather than guess a value.  A sound pipeline —
+  adaptive policy framing plus the truncators' command-dep pin — never
+  produces this verdict; seeing it means the log and checkpoint were
+  manipulated out of band.
 
 Because the verdicts come from the same cut, ``verify_bytes(state)`` can
 replay *only* the kept gtids over the checkpoint image and demand byte
@@ -43,6 +50,7 @@ RULE_ABOVE_RSNE = "above-rsne"
 RULE_NOT_DURABLE = "not-durable-on-all-participants"
 RULE_BELOW_FLOOR = "below-truncation-floor"
 RULE_TORN_TAIL = "torn-tail"
+RULE_CMD_DEP = "command-dep-unreplayable"
 
 # a torn tail needs the 8-byte frame header plus the leading (ssn, tid)
 # qwords of the payload for a best-effort gtid parse
@@ -231,6 +239,61 @@ def _local_verdict(
     return GtidVerdict(gtid, kept, rule, {shard: ssn}, has_reads, detail)
 
 
+def _command_dep_verdicts(
+    ex: RecoveryExplanation,
+    logs: Sequence[ColumnarLog],
+    rsns: int,
+    has_ckpt: bool,
+) -> None:
+    """Downgrade kept command records whose pre-image recovery cannot
+    reach: a dep is replayable iff the checkpoint image covers it
+    (``dep <= RSNs``, full-image checkpoints) or the dep's write is itself a
+    kept record in the retained logs.  Anything else would make
+    ``recover()`` raise ``CommandReplayError`` — surfaced here as the
+    ``command-dep-unreplayable`` verdict."""
+    if not any(log.n_command for log in logs):
+        return
+    # fixpoint: dropping one command strands any later command chained on
+    # its write, so re-scan until no verdict flips (chains are short)
+    changed = True
+    while changed:
+        changed = False
+        written = set()
+        for log in logs:
+            if not len(log.wr_rec):
+                continue
+            kept = np.fromiter(
+                (ex.verdicts[int(t)].kept for t in log.tid.tolist()),
+                dtype=bool, count=log.n_records,
+            )
+            for j in np.flatnonzero(kept[log.wr_rec]).tolist():
+                written.add((log.keys[j], int(log.wr_ssn[j])))
+        for log in logs:
+            if not log.n_command:
+                continue
+            for i, r in enumerate(log.cmd_rec.tolist()):
+                v = ex.verdicts.get(int(log.tid[r]))
+                if v is None or not v.kept:
+                    continue
+                lo, hi = (
+                    int(log.cmd_dep_start[i]), int(log.cmd_dep_start[i + 1])
+                )
+                for dk, ds in zip(
+                    log.cmd_dep_key[lo:hi], log.cmd_dep_ssn[lo:hi].tolist()
+                ):
+                    if (has_ckpt and ds <= rsns) or (dk, ds) in written:
+                        continue
+                    v.kept = False
+                    v.rule = RULE_CMD_DEP
+                    v.detail = (
+                        f"command dep (key {dk!r}, ssn {ds}) is neither in "
+                        f"the retained log nor covered by the checkpoint "
+                        f"image (RSNs {rsns}): recovery refuses to re-execute"
+                    )
+                    changed = True
+                    break
+
+
 def _add_torn(ex: RecoveryExplanation, shard: int, dev: int, torn: bytes):
     if not torn:
         return
@@ -275,6 +338,7 @@ def explain_recovery(
         ):
             ex.verdicts[int(g)] = _local_verdict(
                 0, int(s), int(g), bool(hr), rsne, rsns)
+    _command_dep_verdicts(ex, logs, rsns, has_ckpt=ckpt_data is not None)
     for dev, (_, torn) in enumerate(decoded):
         _add_torn(ex, 0, dev, torn)
     return ex
@@ -363,6 +427,13 @@ def explain_recovery_sharded(
                 )
         ex.verdicts[int(g)] = GtidVerdict(
             int(g), kept, rule, ssn_map, bool(hr), detail)
+
+    # command deps are shard-local (the policy value-frames x-records), so
+    # each shard's coverage check sees only its own logs and checkpoint
+    for p, logs in enumerate(shard_logs):
+        _command_dep_verdicts(
+            ex, logs, rsns[p], has_ckpt=ckpt[p][0] is not None
+        )
 
     for p, row in enumerate(decoded):
         for dev, (_, torn) in enumerate(row):

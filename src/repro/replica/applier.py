@@ -195,6 +195,14 @@ class ReplicaApplier:
             )
         return newly
 
+    def _table_lookup(self, key: bytes):
+        """Pre-image resolver for command records (adaptive logging): a
+        command's dependency may have been folded in an earlier poll — then
+        its pre-image is no longer in any pending chunk but lives in the
+        table row, whose carried SSN high-water mark is exactly the dep SSN
+        the record observed on the primary."""
+        return self.table.get(key.decode("utf-8", "surrogateescape"))
+
     # --- vectorized / pallas -------------------------------------------------
     def _apply_vectorized(self, oks: List[np.ndarray]) -> None:
         logs = [c.log for c in self.pending]
@@ -207,6 +215,7 @@ class ReplicaApplier:
             base=None,
             use_kernel=(self.mode == "pallas"),
             record_mask=oks,
+            dep_lookup=self._table_lookup,
         )
         if not data:
             return
@@ -220,16 +229,52 @@ class ReplicaApplier:
         """Per-write guarded walk.  Equivalence oracle only: each write
         folds under its own mutex hold (no phantom/torn rows, but a round
         is not visibility-atomic the way the vectorized fold is), so live
-        serving should use the default modes."""
+        serving should use the default modes.
+
+        Command writes (adaptive logging) cannot fold order-free: each needs
+        its key's pre-image.  They are collected across the round's chunks
+        and re-executed after the value walk in SSN order — by then every
+        value pre-image of the round has landed, so the table row *is* the
+        dependency (same shape as recovery's deferred command pass)."""
         table = self.table
         one_val = np.empty(1, dtype=object)
+        cmds: List[tuple] = []   # (ssn, key, op_id, dep_ssn, param)
         for c, ok in zip(self.pending, oks):
             log = c.log
             if not len(log.wr_rec):
                 continue
-            for j in np.flatnonzero(ok[log.wr_rec]).tolist():
+            lanes = np.flatnonzero(ok[log.wr_rec]).tolist()
+            if log.n_command:
+                from ..core.recovery import _command_dep_per_write
+                wcmd = log.cmd_mask[log.wr_rec]
+                dep_w = _command_dep_per_write(log) if wcmd.any() else None
+                op_w = log.cmd_op_col[log.wr_rec]
+            else:
+                wcmd = None
+            for j in lanes:
+                if wcmd is not None and wcmd[j]:
+                    cmds.append((
+                        int(log.ssn[log.wr_rec[j]]), log.keys[j],
+                        int(op_w[j]), int(dep_w[j]), log.values[j],
+                    ))
+                    continue
                 one_val[0] = log.values[j]
                 table.upsert_bytes(
                     [log.keys[j]], one_val,
                     np.asarray([log.ssn[log.wr_rec[j]]], dtype=np.int64),
+                )
+        if cmds:
+            from ..core.command import COMMANDS
+            from ..core.recovery import _exec_command_write
+            cmds.sort(key=lambda t: t[0])
+            staged: dict = {}
+            for ssn, key, op_id, dep, param in cmds:
+                _exec_command_write(
+                    staged, key, ssn, op_id, dep, param, COMMANDS,
+                    self._table_lookup,
+                )
+            for key, (val, ssn) in staged.items():
+                one_val[0] = val
+                table.upsert_bytes(
+                    [key], one_val, np.asarray([ssn], dtype=np.int64)
                 )

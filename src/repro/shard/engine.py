@@ -27,7 +27,7 @@ import dataclasses
 import os
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.engine import EngineConfig, PoplarEngine
 from ..core.txn import Txn
@@ -51,6 +51,11 @@ class ShardedConfig:
     # full per-shard EngineConfig override (n_buffers etc. come from it);
     # device_dir is still re-pointed at the shard subdirectory
     engine: Optional[EngineConfig] = None
+    # adaptive command/value framing: ``shard_id -> AdaptivePolicy`` factory
+    # handed to each shard's BatchOCC (None keeps every shard pure-value).
+    # Per-shard because eligibility depends on the shard's *own* checkpoint
+    # RSN — a dep covered by shard 0's image may be uncovered on shard 1.
+    policy_factory: Optional[Callable[[int], object]] = None
 
 
 class Shard:
@@ -80,6 +85,10 @@ class Shard:
             n_workers=cfg.n_workers,
             mode=cfg.mode,
             worker_id_base=shard_id * cfg.n_workers,
+            policy=(
+                cfg.policy_factory(shard_id)
+                if cfg.policy_factory is not None else None
+            ),
         )
 
 

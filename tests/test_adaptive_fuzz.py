@@ -1,0 +1,287 @@
+"""Mixed command/value log fuzzing: every decoder stops at a clean frame
+boundary — or raises — under truncation at *every* byte offset and under
+single-byte corruption at *every* byte offset.  Never a mis-framed record.
+
+The adaptive-logging wire format interleaves three frame shapes in one
+stream (value, FLAG_COMMAND with the dep footer, FLAG_XSHARD with the
+participant footer), so framing bugs have three times the surface: a
+command footer misparsed as the next frame's header, a dep count read as a
+length, a torn param spilling into a value record.  This suite pins the
+contract for all four consumers:
+
+* ``decode_records``        — scalar oracle;
+* ``decode_columnar``       — batch columnar decode;
+* ``decode_columnar_stream``— incremental framing + consumed offset;
+* ``decode_fast_tile``      — the fused-replay tile, which must *decline*
+  (return ``None``) whenever the clean prefix carries COMMAND/XSHARD
+  frames, and otherwise frame byte-identically to the stream decoder.
+
+Exhaustive small cases run unconditionally; a hypothesis wrapper widens the
+seed/offset space when the library is installed (same pattern as
+``test_serve_property.py``).
+"""
+
+from struct import error as struct_error
+
+import numpy as np
+import pytest
+
+from repro.core import Txn, decode_columnar, decode_columnar_stream, decode_records
+from repro.core.command import OP_ADD_U64, OP_PATCH_PREFIX
+from repro.core.fastdecode import decode_fast_tile
+from repro.core.txn import FLAG_COMMAND, FLAG_XSHARD
+
+try:  # pragma: no cover - environment dependent
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# blob builder: value + command + xshard records interleaved
+# ---------------------------------------------------------------------------
+
+def _mixed_blob(n_records: int = 16, seed: int = 11):
+    """Returns ``(blob, ends, txns)`` where ``ends[i]`` is the byte offset
+    one past record ``i`` (the clean frame boundaries)."""
+    rng = np.random.RandomState(seed)
+    out = bytearray()
+    ends = []
+    txns = []
+    for i in range(n_records):
+        nw = int(rng.randint(1, 4))
+        keys = [f"k{int(rng.randint(8))}" for _ in range(nw)]
+        t = Txn(
+            tid=1000 + i,
+            write_set=[
+                (k, bytes(rng.bytes(int(rng.randint(0, 24))))) for k in keys
+            ],
+            read_set=[("r", 0)] if rng.rand() < 0.5 else [],
+        )
+        # first three records pin one of each shape (value/command/xshard)
+        # so the mix is guaranteed regardless of seed; the rest are random
+        shape = (0.7, 0.2, 0.5)[i] if i < 3 else rng.rand()
+        if shape < 0.4:
+            # command frame: params in the value slots, deps mirror writes
+            t.cmd_op = OP_ADD_U64 if rng.rand() < 0.5 else OP_PATCH_PREFIX
+            t.cmd_deps = [(k, int(rng.randint(1, 50))) for k in keys]
+        elif shape < 0.6:
+            t.xdep = [(0, i + 1), (1, i + 2)]
+        t.ssn = i + 1
+        out.extend(t.encode())
+        ends.append(len(out))
+        txns.append(t)
+    return bytes(out), ends, txns
+
+
+def _rec_eq(rec, txn) -> bool:
+    """Does a decoded LogRecord match the Txn that framed it?"""
+    if rec.ssn != txn.ssn or rec.tid != txn.tid:
+        return False
+    if rec.has_reads != bool(txn.read_set):
+        return False
+    want_writes = [(k.encode(), v) for k, v in txn.write_set]
+    if rec.writes != want_writes:
+        return False
+    if (rec.cmd_op is not None) != (txn.cmd_op is not None):
+        return False
+    if txn.cmd_op is not None:
+        if rec.cmd_op != txn.cmd_op:
+            return False
+        want_deps = [(k.encode(), s) for k, s in txn.cmd_deps]
+        if rec.cmd_deps != want_deps:
+            return False
+    if (rec.xdep is not None) != (txn.xdep is not None):
+        return False
+    if txn.xdep is not None and rec.xdep != txn.xdep:
+        return False
+    return True
+
+
+def _columnar_matches_records(log, recs) -> None:
+    """Cross-check the columnar decode against the scalar oracle records."""
+    assert log.n_records == len(recs)
+    assert log.ssn.tolist() == [r.ssn for r in recs]
+    assert log.tid.tolist() == [r.tid for r in recs]
+    assert log.has_reads.tolist() == [r.has_reads for r in recs]
+    assert log.n_writes.tolist() == [len(r.writes) for r in recs]
+    flat = [(i, k, v) for i, r in enumerate(recs) for k, v in r.writes]
+    assert log.wr_rec.tolist() == [i for i, _, _ in flat]
+    assert log.keys == [k for _, k, _ in flat]
+    assert log.values == [v for _, _, v in flat]
+    cmd_idx = [i for i, r in enumerate(recs) if r.is_command]
+    if not cmd_idx:
+        assert log.n_command == 0
+    else:
+        assert log.cmd_rec.tolist() == cmd_idx
+        assert log.cmd_op.tolist() == [recs[i].cmd_op for i in cmd_idx]
+        deps = [d for i in cmd_idx for d in recs[i].cmd_deps]
+        assert log.cmd_dep_key == [k for k, _ in deps]
+        assert log.cmd_dep_ssn.tolist() == [s for _, s in deps]
+        assert np.diff(log.cmd_dep_start).tolist() == [
+            len(recs[i].cmd_deps) for i in cmd_idx
+        ]
+
+
+def _n_clean(ends, cut: int) -> int:
+    """How many whole records fit in ``blob[:cut]``."""
+    return sum(1 for e in ends if e <= cut)
+
+
+def _check_prefix(blob: bytes, ends, txns, cut: int) -> None:
+    """The decoder contract at one truncation point: every decoder yields
+    exactly the records of the longest clean frame prefix <= cut."""
+    pref = blob[:cut]
+    n = _n_clean(ends, cut)
+    boundary = ends[n - 1] if n else 0
+
+    recs = decode_records(pref)
+    assert len(recs) == n
+    for rec, txn in zip(recs, txns):
+        assert _rec_eq(rec, txn)
+
+    log, consumed = decode_columnar_stream(pref)
+    assert consumed == boundary
+    _columnar_matches_records(log, recs)
+    _columnar_matches_records(decode_columnar(pref), recs)
+
+    tile = decode_fast_tile(pref)
+    mixed = any(
+        txns[i].cmd_op is not None or txns[i].xdep is not None for i in range(n)
+    )
+    if mixed:
+        # the fused tile must decline mixed prefixes, never guess
+        assert tile is None
+    else:
+        assert tile is not None
+        assert tile.consumed == boundary
+        assert tile.n_records == n
+        assert tile.ssn.tolist() == log.ssn.tolist()
+        assert tile.wr_rec.tolist() == log.wr_rec.tolist()
+        assert [
+            tile.buf[o : o + ln]
+            for o, ln in zip(tile.val_off.tolist(), tile.val_len.tolist())
+        ] == log.values
+
+
+def _check_corruption(blob: bytes, ends, txns, pos: int) -> None:
+    """Flip one byte; every decoder must stop at (or before) the frame
+    holding it, yielding only untouched records — or raise.  A crc32
+    collision on a single-byte flip is impossible, so 'before' only happens
+    if a decoder chooses to raise instead of truncate (also acceptable)."""
+    bad = bytearray(blob)
+    bad[pos] ^= 0xFF
+    bad = bytes(bad)
+    j = _n_clean(ends, pos)  # index of the frame containing byte ``pos``
+
+    try:
+        recs = decode_records(bad)
+    except (ValueError, struct_error):
+        recs = None
+    if recs is not None:
+        assert len(recs) <= j
+        for rec, txn in zip(recs, txns):
+            assert _rec_eq(rec, txn)
+
+    try:
+        log, consumed = decode_columnar_stream(bad)
+    except (ValueError, struct_error):
+        log = None
+    if log is not None:
+        assert log.n_records <= j
+        assert consumed <= (ends[j - 1] if j else 0)
+        if recs is not None:
+            _columnar_matches_records(log, recs[: log.n_records])
+
+    try:
+        tile = decode_fast_tile(bad)
+    except (ValueError, struct_error):
+        tile = None
+    if tile is not None:
+        assert tile.n_records <= j
+        for i in range(tile.n_records):
+            assert int(tile.ssn[i]) == txns[i].ssn
+
+
+# ---------------------------------------------------------------------------
+# exhaustive small cases
+# ---------------------------------------------------------------------------
+
+def test_full_blob_round_trips():
+    blob, ends, txns = _mixed_blob()
+    assert ends[-1] == len(blob)
+    recs = decode_records(blob)
+    assert len(recs) == len(txns)
+    for rec, txn in zip(recs, txns):
+        assert _rec_eq(rec, txn)
+    # the blob genuinely mixes all three shapes, or the suite tests nothing
+    flags = {(r.is_command, r.xdep is not None) for r in recs}
+    assert (True, False) in flags and (False, True) in flags and (False, False) in flags
+
+
+def test_truncate_at_every_byte_offset():
+    blob, ends, txns = _mixed_blob()
+    for cut in range(len(blob) + 1):
+        _check_prefix(blob, ends, txns, cut)
+
+
+def test_corrupt_every_byte_offset():
+    blob, ends, txns = _mixed_blob(n_records=12, seed=3)
+    for pos in range(len(blob)):
+        _check_corruption(blob, ends, txns, pos)
+
+
+def test_fast_tile_declines_exactly_on_mixed_frames():
+    """Byte-level pin of the decline rule: the tile is None iff the clean
+    prefix contains a COMMAND or XSHARD frame (the flag bits, not heuristics)."""
+    blob, ends, txns = _mixed_blob(n_records=20, seed=5)
+    for n, e in enumerate(ends, start=1):
+        pref = blob[:e]
+        recs = decode_records(pref)
+        flags_mixed = any(
+            r.is_command or r.xdep is not None for r in recs
+        )
+        tile = decode_fast_tile(pref)
+        assert (tile is None) == flags_mixed
+        if tile is not None:
+            assert tile.n_records == n
+
+
+def test_command_value_flag_bits_disjoint():
+    """COMMAND and XSHARD flag bits must stay distinct and single-bit (the
+    decoders branch on them independently)."""
+    assert FLAG_COMMAND & FLAG_XSHARD == 0
+    assert bin(FLAG_COMMAND).count("1") == 1
+
+
+# ---------------------------------------------------------------------------
+# hypothesis wrapper (same gating pattern as test_serve_property.py)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        n=st.integers(min_value=1, max_value=24),
+        frac=st.floats(min_value=0.0, max_value=1.0),
+        corrupt=st.booleans(),
+    )
+    def test_fuzz_truncate_and_corrupt(seed, n, frac, corrupt):
+        blob, ends, txns = _mixed_blob(n_records=n, seed=seed)
+        pos = min(int(frac * len(blob)), len(blob) - 1)
+        if corrupt:
+            _check_corruption(blob, ends, txns, pos)
+        else:
+            _check_prefix(blob, ends, txns, pos)
+
+else:  # pragma: no cover
+
+    @pytest.mark.skip(
+        reason="hypothesis not installed; the exhaustive cases above "
+        "exercise the same properties"
+    )
+    def test_fuzz_truncate_and_corrupt():
+        pass

@@ -1,0 +1,332 @@
+"""Adaptive logging crash equivalence: a run whose winners are
+command-framed recovers **byte-identically** to the pure-value oracle —
+the same workload executed with ``AdaptivePolicy(force_value=True)`` — at
+arbitrary kill points, through every replay surface:
+
+* single-shard ``recover()`` in all three modes (vectorized/pallas/scalar),
+  with a fuzzy checkpoint underneath (so command deps split into
+  image-covered and log-covered classes);
+* 2-shard ``recover_sharded()`` with cross-shard riders (which the policy
+  must keep value-framed) and a partially-flushed crash;
+* ``Replica.promote()`` over shipped prefixes of the same logs.
+
+Kill points use the captured-byte-stream pattern of ``test_truncation``:
+both runs execute the identical deterministic schedule, so their devices
+hold the *same records in the same order* (only framed differently), and
+cutting each device after record ``n`` crashes both runs at the same
+logical instant.  Cuts land mid-schedule, between devices asymmetrically,
+and on torn garbage tails.
+"""
+
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CheckpointDaemon,
+    DeviceSpec,
+    EngineConfig,
+    PoplarEngine,
+    StorageDevice,
+    recover,
+)
+from repro.core.command import OP_ADD_U64, OP_PATCH_PREFIX
+from repro.core.engine import AdaptivePolicy
+from repro.core.txn import decode_columnar
+from repro.db import ArrayTable, BatchOCC, TxnSpec
+from repro.replica import Replica
+from repro.shard import ShardedConfig, ShardedEngine, recover_sharded
+
+MODES = ("vectorized", "pallas", "scalar")
+
+
+# ---------------------------------------------------------------------------
+# captured-byte-stream kill points
+# ---------------------------------------------------------------------------
+
+def _prefix_records(blob: bytes, n: int) -> bytes:
+    """The byte prefix holding the first ``n`` whole frames of ``blob``."""
+    off = 0
+    for _ in range(n):
+        if off + 8 > len(blob):
+            break
+        plen = struct.unpack_from("<I", blob, off)[0]
+        if off + 8 + plen > len(blob):
+            break
+        off += 8 + plen
+    return blob[:off]
+
+
+def _n_records(blob: bytes) -> int:
+    off = n = 0
+    while off + 8 <= len(blob):
+        plen = struct.unpack_from("<I", blob, off)[0]
+        if off + 8 + plen > len(blob):
+            break
+        off += 8 + plen
+        n += 1
+    return n
+
+
+def _mem_devices(blobs):
+    out = []
+    for b in blobs:
+        d = StorageDevice(DeviceSpec.null(), clock="virtual")
+        d.write(b)
+        out.append(d)
+    return out
+
+
+def _cut_devices(streams, counts, torn: bool = False):
+    """In-memory devices holding each stream cut after ``counts[i]`` records
+    (the crash), optionally with a torn garbage tail on device 0."""
+    blobs = [_prefix_records(s, n) for s, n in zip(streams, counts)]
+    if torn:
+        blobs[0] = blobs[0] + b"\xfe" * 13
+    return _mem_devices(blobs)
+
+
+# ---------------------------------------------------------------------------
+# single-shard workload (identical schedule, framing decided by the policy)
+# ---------------------------------------------------------------------------
+
+def _csn_fn(engine):
+    def fn():
+        for i in range(len(engine.buffers)):
+            engine.logger_tick(i, force=True)
+        return engine.commit.advance_csn()
+    return fn
+
+
+def _run_single(root: str, adaptive: bool):
+    """Deterministic mixed workload: preloaded wide tuples (dep SSN 0 —
+    command-eligible only once a full-image checkpoint exists), logged
+    counters (log-covered deps), blind value writes, an unregistered-op
+    spec (forced-value hatch), and a mid-run checkpoint.  Returns the
+    engine's devices + checkpoint dir, fully flushed."""
+    dev_dir = os.path.join(root, "devs")
+    ckpt_dir = os.path.join(root, "ckpt")
+    cfg = EngineConfig(n_buffers=2, device_kind="ssd", device_dir=dev_dir,
+                       device_clock="virtual", segment_bytes=64 * 1024)
+    eng = PoplarEngine(cfg)
+    table = ArrayTable()
+    wide = [f"w{i}" for i in range(10)]
+    for k in wide:
+        table.insert(k, b"\x00" * 48)          # ssn 0: in no log
+    ctrs = [f"c{i}" for i in range(4)]
+    daemon = CheckpointDaemon(ckpt_dir, n_threads=2, m_files=2,
+                              csn_fn=_csn_fn(eng))
+    pol = AdaptivePolicy(checkpoint_dir=ckpt_dir, force_value=not adaptive)
+    occ = BatchOCC(table, eng, policy=pol)
+    rng = np.random.default_rng(42)
+
+    # counters get logged base versions first (log-covered command deps)
+    occ.execute_batch(
+        [TxnSpec(writes=[(k, struct.pack("<Q", 5) + b"\x00" * 8)])
+         for k in ctrs]
+    )
+    for rnd in range(10):
+        specs = []
+        picks = rng.choice(len(wide), size=3, replace=False)
+        for j in picks.tolist():
+            k = wide[j]
+            cur, cssn = table.get(k)
+            pfx = bytes([rnd + 1]) * 6
+            specs.append(TxnSpec(
+                reads=[k], writes=[(k, pfx + cur[len(pfx):])],
+                observed=[cssn], cmd_op=OP_PATCH_PREFIX, cmd_params=[pfx],
+            ))
+        c = ctrs[int(rng.integers(len(ctrs)))]
+        cur, cssn = table.get(c)
+        delta = int(rng.integers(1, 9))
+        newv = struct.pack(
+            "<Q", (struct.unpack_from("<Q", cur)[0] + delta) & (2**64 - 1)
+        ) + cur[8:]
+        specs.append(TxnSpec(
+            reads=[c], writes=[(c, newv)], observed=[cssn],
+            cmd_op=OP_ADD_U64, cmd_params=[struct.pack("<Q", delta)],
+        ))
+        specs.append(TxnSpec(writes=[(f"blind{rnd}", bytes([rnd]) * 24)]))
+        if rnd % 3 == 0:
+            # unregistered op: the policy's forced-value escape hatch
+            k = wide[int(picks[0])]
+            cur, cssn = table.get(k)
+            specs.append(TxnSpec(
+                reads=[k], writes=[(k, b"U" * 8 + cur[8:])],
+                observed=[cssn], cmd_op=999, cmd_params=[b"U" * 8],
+            ))
+        occ.execute_batch(specs)
+        if rnd == 4:
+            # full image — including ssn-0 rows, the cover the policy's
+            # dep-0 clause relies on (fig_truncation's s>0 filter would
+            # be unsound here)
+            entries = sorted((k.encode(), v, s) for k, v, s in table.items())
+            daemon.run_once([entries[0::2], entries[1::2]], epoch=rnd)
+            pol.refresh()
+    for i in range(cfg.n_buffers):
+        eng.logger_tick(i, force=True)
+    return eng.devices, ckpt_dir
+
+
+@pytest.fixture(scope="module")
+def single_runs(tmp_path_factory):
+    vroot = str(tmp_path_factory.mktemp("value"))
+    aroot = str(tmp_path_factory.mktemp("adaptive"))
+    vdevs, vck = _run_single(vroot, adaptive=False)
+    adevs, ack = _run_single(aroot, adaptive=True)
+    vstreams = [d.read_from(0) for d in vdevs]
+    astreams = [d.read_from(0) for d in adevs]
+    return vstreams, vck, astreams, ack
+
+
+def test_workload_actually_mixes_framings(single_runs):
+    vstreams, _, astreams, _ = single_runs
+    ncmd = sum(decode_columnar(s).n_command for s in astreams)
+    nval = sum(
+        decode_columnar(s).n_records - decode_columnar(s).n_command
+        for s in astreams
+    )
+    assert ncmd > 10, "adaptive run framed no commands — the test is vacuous"
+    assert nval > 0, "forced-value hatch never taken"
+    assert sum(decode_columnar(s).n_command for s in vstreams) == 0
+    # the two runs hold the same records in the same order (only framing
+    # differs) — the premise of every record-count kill point below
+    for vs, as_ in zip(vstreams, astreams):
+        lv, la = decode_columnar(vs), decode_columnar(as_)
+        assert lv.ssn.tolist() == la.ssn.tolist()
+        assert lv.tid.tolist() == la.tid.tolist()
+    # and command framing ships fewer bytes on this RMW-heavy mix
+    assert sum(map(len, astreams)) < sum(map(len, vstreams))
+
+
+def test_quiesced_recovery_equals_value_oracle(single_runs):
+    vstreams, vck, astreams, ack = single_runs
+    oracle = recover(_mem_devices(vstreams), checkpoint_dir=vck,
+                     parallel=False)
+    for mode in MODES:
+        got = recover(_mem_devices(astreams), checkpoint_dir=ack,
+                      parallel=False, mode=mode)
+        assert got.data == oracle.data, mode
+        assert got.rsne == oracle.rsne and got.rsns == oracle.rsns, mode
+
+
+def test_kill_point_recovery_equals_value_oracle(single_runs):
+    vstreams, vck, astreams, ack = single_runs
+    totals = [_n_records(s) for s in vstreams]
+    rng = np.random.default_rng(7)
+    cuts = [(0, 0), tuple(totals)]
+    cuts += [
+        tuple(int(rng.integers(0, t + 1)) for t in totals) for _ in range(8)
+    ]
+    for torn in (False, True):
+        for counts in cuts:
+            oracle = recover(
+                _cut_devices(vstreams, counts, torn=torn),
+                checkpoint_dir=vck, parallel=False,
+            )
+            for mode in MODES:
+                got = recover(
+                    _cut_devices(astreams, counts, torn=torn),
+                    checkpoint_dir=ack, parallel=False, mode=mode,
+                )
+                assert got.data == oracle.data, (counts, torn, mode)
+                assert got.rsne == oracle.rsne, (counts, torn, mode)
+
+
+def test_promote_equals_value_oracle_at_kill_points(single_runs):
+    vstreams, vck, astreams, ack = single_runs
+    totals = [_n_records(s) for s in vstreams]
+    rng = np.random.default_rng(13)
+    cuts = [tuple(totals)] + [
+        tuple(int(rng.integers(0, t + 1)) for t in totals) for _ in range(4)
+    ]
+    for counts in cuts:
+        oracle = recover(_cut_devices(vstreams, counts),
+                         checkpoint_dir=vck, parallel=False)
+        for mode in MODES:
+            rep = Replica(_cut_devices(astreams, counts),
+                          checkpoint_dir=ack, mode=mode, parallel=False)
+            st = rep.promote()
+            assert st.data == oracle.data, (counts, mode)
+            assert st.rsne == oracle.rsne, (counts, mode)
+
+
+# ---------------------------------------------------------------------------
+# 2-shard: adaptive per-shard framing + value-framed cross-shard riders
+# ---------------------------------------------------------------------------
+
+def _run_sharded(tmp_path, adaptive: bool, flush_all: bool):
+    eng = ShardedEngine(ShardedConfig(
+        n_shards=2, n_buffers=1, n_workers=2, device_kind="ssd",
+        device_dir=str(tmp_path), device_clock="virtual",
+        policy_factory=lambda sid: AdaptivePolicy(force_value=not adaptive),
+    ))
+    keys = [f"user{i:010d}" for i in range(24)]
+    by = [[k for k in keys if eng.shard_of(k) == p] for p in range(2)]
+    assert all(len(b) >= 4 for b in by)
+    # logged base versions (no checkpoints here, so only log-covered deps
+    # are command-eligible; preloads would be dep-0 and must stay value)
+    eng.execute_batch(
+        [TxnSpec(writes=[(k, struct.pack("<Q", 10) + b"\x00" * 24)])
+         for k in keys]
+    )
+    eng.tick(force=True)
+    rng = np.random.default_rng(99)
+    for rnd in range(6):
+        specs = []
+        for p in range(2):
+            k = by[p][int(rng.integers(len(by[p])))]
+            cur, cssn = eng.get(k)
+            delta = int(rng.integers(1, 7))
+            newv = struct.pack(
+                "<Q", (struct.unpack_from("<Q", cur)[0] + delta) & (2**64 - 1)
+            ) + cur[8:]
+            specs.append(TxnSpec(
+                reads=[k], writes=[(k, newv)], observed=[cssn],
+                cmd_op=OP_ADD_U64, cmd_params=[struct.pack("<Q", delta)],
+            ))
+        # a cross-shard rider: spans both shards, must stay value-framed
+        specs.append(TxnSpec(
+            writes=[(by[0][rnd % 4], b"X0" * 8), (by[1][rnd % 4], b"X1" * 8)]
+        ))
+        eng.execute_batch(specs)
+        eng.tick(force=True)
+        eng.drain()
+    # one final cross-shard transaction left torn on shard 1 when not
+    # flushing everything (the partially-durable crash)
+    eng.execute_batch(
+        [TxnSpec(writes=[(by[0][0], b"T0" * 4), (by[1][0], b"T1" * 4)])]
+    )
+    if flush_all:
+        eng.tick(force=True)
+        eng.drain()
+    else:
+        for i in range(len(eng.shards[0].engine.buffers)):
+            eng.shards[0].engine.logger_tick(i, force=True)
+    return eng
+
+
+@pytest.mark.parametrize("flush_all", [True, False])
+def test_sharded_recovery_equals_value_oracle(tmp_path, flush_all):
+    veng = _run_sharded(tmp_path / "value", adaptive=False,
+                        flush_all=flush_all)
+    aeng = _run_sharded(tmp_path / "adaptive", adaptive=True,
+                        flush_all=flush_all)
+    ncmd = sum(
+        decode_columnar(d.read_from(0)).n_command
+        for devs in aeng.devices for d in devs
+    )
+    assert ncmd > 0, "sharded adaptive run framed no commands"
+    # cross-shard records must all be value-framed in both runs
+    for devs in aeng.devices:
+        for d in devs:
+            log = decode_columnar(d.read_from(0))
+            if log.x_rec is not None and log.n_command:
+                assert not log.cmd_mask[log.x_rec].any()
+    oracle = recover_sharded(veng.devices, parallel=False)
+    for mode in MODES:
+        st = recover_sharded(aeng.devices, parallel=False, mode=mode)
+        assert st.data == oracle.data, mode
+        assert st.n_cross_dropped == oracle.n_cross_dropped, mode
